@@ -1,0 +1,33 @@
+"""Paper Fig. 6: accuracy vs communication round, all three datasets.
+
+Writes the full curves to experiments/fl/fig6_<dataset>.csv and reports
+summary points in the bench CSV."""
+
+from __future__ import annotations
+
+import os
+import time
+
+from benchmarks.fl_common import MAX_ROUNDS, run_policy
+
+DATASETS = ["mnist", "fashion_mnist", "cifar10"]
+SIGMA = 0.5
+
+
+def run(csv_rows: list) -> None:
+    os.makedirs("experiments/fl", exist_ok=True)
+    for dataset in DATASETS:
+        t0 = time.time()
+        runner = run_policy(dataset, "dqre_sc", SIGMA,
+                            max_rounds=MAX_ROUNDS)
+        path = f"experiments/fl/fig6_{dataset}.csv"
+        with open(path, "w") as f:
+            f.write("round,accuracy,loss,reward\n")
+            for h in runner.history:
+                f.write(f"{h.round_idx},{h.accuracy:.4f},{h.loss:.4f},"
+                        f"{h.reward:.4f}\n")
+        us = (time.time() - t0) * 1e6
+        accs = [h.accuracy for h in runner.history]
+        csv_rows.append((f"fig6/{dataset}", us,
+                         f"rounds={len(accs)};first={accs[0]:.3f};"
+                         f"best={max(accs):.3f};curve={path}"))

@@ -1,0 +1,42 @@
+"""Shared FL-benchmark harness (paper Tables 2/3, Fig. 6).
+
+CPU-budgeted defaults: the paper ran hundreds of rounds on 100 clients;
+the bench defaults scale that down (REPRO_BENCH_SCALE=full restores
+paper-scale settings).  All comparisons are *relative* across policies on
+identical seeds/partitions, which is the claim being validated.
+"""
+
+from __future__ import annotations
+
+import os
+
+from repro.fed import FederatedRunner, RunnerConfig
+
+FULL = os.environ.get("REPRO_BENCH_SCALE", "quick") == "full"
+
+DEFAULTS = dict(
+    num_clients=100 if FULL else 20,
+    clients_per_round=10 if FULL else 5,
+    local_steps=20 if FULL else 8,
+    batch_size=32 if FULL else 16,
+    train_size=None if FULL else 2500,
+    eval_size=2048 if FULL else 384,
+    embed_dim=8,
+    num_clusters=8 if FULL else 4,
+)
+
+MAX_ROUNDS = 300 if FULL else 15
+
+# per-dataset target accuracies (synthetic stand-ins are easier than the
+# real datasets; targets chosen so policies differentiate mid-training)
+TARGETS = {"mnist": 0.90, "fashion_mnist": 0.80, "cifar10": 0.60}
+
+
+def run_policy(dataset: str, policy: str, sigma: float, seed: int = 0,
+               max_rounds: int = None, **overrides):
+    cfg = RunnerConfig(dataset=dataset, policy=policy, sigma=sigma,
+                       target_accuracy=TARGETS[dataset], seed=seed,
+                       **{**DEFAULTS, **overrides})
+    runner = FederatedRunner(cfg)
+    runner.run(max_rounds or MAX_ROUNDS, stop_at_target=True)
+    return runner

@@ -1,0 +1,59 @@
+"""Kernel micro-benchmarks: jnp reference path timings (the production
+CPU path) + interpret-mode Pallas validation cost.  On TPU the same
+harness times the compiled kernels."""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops, ref
+
+
+def _time(fn, *args, iters=5):
+    fn(*args)                      # compile / warm
+    t0 = time.time()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.time() - t0) / iters * 1e6
+
+
+def run(csv_rows: list) -> None:
+    key = jax.random.PRNGKey(0)
+    on_tpu = jax.default_backend() == "tpu"
+
+    # pairwise distances (spectral clustering hotspot): n clients
+    for n in (128, 512):
+        x = jax.random.normal(key, (n, 16))
+        us_ref = _time(jax.jit(ref.pairwise_sq_dists_ref), x, x)
+        csv_rows.append((f"kernel/pairwise_ref/n{n}", us_ref,
+                         f"bytes={n*n*4}"))
+        if on_tpu:
+            us_k = _time(lambda a, b: ops.pairwise_sq_dists(a, b), x, x)
+            csv_rows.append((f"kernel/pairwise_pallas/n{n}", us_k, ""))
+
+    # flash attention jnp-blocked vs naive at growing S
+    from repro.models.attention import blocked_attention
+    for S in (256, 1024):
+        q = jax.random.normal(key, (1, S, 4, 64), jnp.float32)
+        k = jax.random.normal(jax.random.fold_in(key, 1), (1, S, 2, 64))
+        v = jax.random.normal(jax.random.fold_in(key, 2), (1, S, 2, 64))
+        us_naive = _time(jax.jit(lambda a, b, c: ref.attention_ref(
+            a, b, c, causal=True)), q, k, v)
+        us_block = _time(jax.jit(lambda a, b, c: blocked_attention(
+            a, b, c, causal=True)), q, k, v)
+        csv_rows.append((f"kernel/attn_naive/S{S}", us_naive, ""))
+        csv_rows.append((f"kernel/attn_blocked/S{S}", us_block,
+                         f"vs_naive={us_block/us_naive:.2f}x"))
+
+    # SSD chunked vs per-token scan cost proxy
+    from repro.models import mamba as M
+    from repro.configs import get_config
+    cfg = get_config("mamba2-2.7b").reduced()
+    p = M.mamba_init(key, cfg)
+    x = jax.random.normal(key, (2, 128, cfg.d_model))
+    us_ssd = _time(jax.jit(lambda a: M.mamba_apply(p, a, cfg)[0]), x)
+    csv_rows.append(("kernel/ssd_chunked/S128", us_ssd, ""))

@@ -1,0 +1,57 @@
+"""§Roofline: aggregate the dry-run JSON records into the baseline table
+(one row per arch × shape; single-pod mesh)."""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+
+def load_records(pattern="experiments/dryrun/*__16x16.json"):
+    recs = []
+    for path in sorted(glob.glob(pattern)):
+        with open(path) as f:
+            recs.append(json.load(f))
+    return recs
+
+
+def format_table(recs) -> str:
+    hdr = (f"{'arch':24s} {'shape':12s} {'compute_ms':>10s} {'memory_ms':>10s}"
+           f" {'coll_ms':>9s} {'bound':>10s} {'useful':>7s} {'GiB/dev':>8s}")
+    lines = [hdr, "-" * len(hdr)]
+    for r in recs:
+        if r.get("status") != "ok":
+            lines.append(f"{r['arch']:24s} {r['shape']:12s} FAILED: "
+                         f"{r.get('error', '?')[:60]}")
+            continue
+        rf = r["roofline"]
+        mem = (r["memory"].get("peak_bytes") or 0) / 2 ** 30
+        ratio = rf.get("useful_flop_ratio") or 0.0
+        lines.append(
+            f"{r['arch']:24s} {r['shape']:12s} {rf['compute_s']*1e3:10.2f} "
+            f"{rf['memory_s']*1e3:10.2f} {rf['collective_s']*1e3:9.2f} "
+            f"{rf['bottleneck']:>10s} {ratio:7.3f} {mem:8.2f}")
+    return "\n".join(lines)
+
+
+def run(csv_rows: list) -> None:
+    recs = load_records()
+    for r in recs:
+        if r.get("status") != "ok":
+            csv_rows.append((f"roofline/{r['arch']}/{r['shape']}", 0.0,
+                             f"FAILED:{r.get('error','')[:80]}"))
+            continue
+        rf = r["roofline"]
+        csv_rows.append((
+            f"roofline/{r['arch']}/{r['shape']}",
+            rf["step_s_bound"] * 1e6,
+            f"bottleneck={rf['bottleneck']};"
+            f"compute_ms={rf['compute_s']*1e3:.2f};"
+            f"memory_ms={rf['memory_s']*1e3:.2f};"
+            f"collective_ms={rf['collective_s']*1e3:.2f};"
+            f"useful_ratio={rf.get('useful_flop_ratio') or 0:.3f}"))
+    if recs:
+        os.makedirs("experiments", exist_ok=True)
+        with open("experiments/roofline_table.txt", "w") as f:
+            f.write(format_table(recs) + "\n")

@@ -1,0 +1,64 @@
+"""Benchmark registry — one module per paper table/figure + system perf.
+
+Prints ``name,us_per_call,derived`` CSV rows (scaffold contract).
+
+  PYTHONPATH=src python -m benchmarks.run                # everything
+  PYTHONPATH=src python -m benchmarks.run --only table2  # one suite
+  REPRO_BENCH_SCALE=full ... --only table2               # paper-scale FL
+
+Suites:
+  table2    — paper Table 2: rounds-to-accuracy per selection policy
+  table3    — paper Table 3: evaluation criteria of DQRE-SCnet
+  fig6      — paper Fig. 6: accuracy-vs-round curves
+  kernels   — Pallas/jnp kernel micro-benchmarks
+  roofline  — §Roofline baseline table from the dry-run artifacts
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+SUITES = ["table2", "table3", "fig6", "kernels", "roofline"]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--only", default=None,
+                    help=f"comma-separated subset of {SUITES}")
+    args = ap.parse_args()
+    selected = args.only.split(",") if args.only else SUITES
+
+    csv_rows: list = []
+    t0 = time.time()
+    for suite in selected:
+        if suite == "table2":
+            from benchmarks import table2_rounds
+            table2_rounds.run(csv_rows)
+        elif suite == "table3":
+            from benchmarks import table3_metrics
+            table3_metrics.run(csv_rows)
+        elif suite == "fig6":
+            from benchmarks import fig6_curves
+            fig6_curves.run(csv_rows)
+        elif suite == "kernels":
+            from benchmarks import kernel_bench
+            kernel_bench.run(csv_rows)
+        elif suite == "roofline":
+            from benchmarks import roofline_table
+            roofline_table.run(csv_rows)
+        else:
+            print(f"unknown suite {suite!r}", file=sys.stderr)
+            raise SystemExit(2)
+
+    print("name,us_per_call,derived")
+    for name, us, derived in csv_rows:
+        print(f"{name},{us:.1f},{derived}")
+    print(f"# total {time.time()-t0:.1f}s, {len(csv_rows)} rows",
+          file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,20 @@
+"""Paper Table 3: evaluation criteria of DQRE-SCnet per dataset
+(balanced accuracy, accuracy, recall, kappa, precision, AUC)."""
+
+from __future__ import annotations
+
+import time
+
+from benchmarks.fl_common import run_policy
+
+DATASETS = ["mnist", "fashion_mnist", "cifar10"]
+
+
+def run(csv_rows: list) -> None:
+    for dataset in DATASETS:
+        t0 = time.time()
+        runner = run_policy(dataset, "dqre_sc", sigma=1.0)
+        m = runner.final_metrics()
+        us = (time.time() - t0) * 1e6
+        derived = ";".join(f"{k}={v:.4f}" for k, v in m.items())
+        csv_rows.append((f"table3/{dataset}/dqre_sc", us, derived))

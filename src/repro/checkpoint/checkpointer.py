@@ -1,0 +1,144 @@
+"""Pytree checkpointing to .npz (orbax-free, offline-friendly).
+
+Flattens a pytree to path-keyed arrays; restores with exact tree
+structure and dtypes.  ``Checkpointer`` adds step management, retention,
+and atomic writes (tmp + rename) so an interrupted save never corrupts
+the latest checkpoint.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import re
+import tempfile
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+
+_SEP = "::"
+
+
+def _flatten_with_paths(tree):
+    flat = {}
+
+    def walk(node, path):
+        if isinstance(node, dict):
+            for k in sorted(node):
+                walk(node[k], path + [str(k)])
+        elif isinstance(node, (list, tuple)):
+            for i, v in enumerate(node):
+                walk(v, path + [f"#{i}"])
+        elif node is None:
+            flat[_SEP.join(path) + "::__none__"] = np.zeros((0,))
+        else:
+            flat[_SEP.join(path)] = np.asarray(node)
+
+    walk(tree, [])
+    return flat
+
+
+def _unflatten_from_paths(flat: dict, template=None):
+    root: Any = {}
+    for key, val in flat.items():
+        parts = key.split(_SEP)
+        is_none = parts[-1] == "__none__"
+        if is_none:
+            parts = parts[:-1]
+        node = root
+        for p in parts[:-1]:
+            node = node.setdefault(p, {})
+        node[parts[-1]] = None if is_none else val
+
+    def fix(node):
+        if isinstance(node, dict):
+            keys = list(node)
+            if keys and all(re.fullmatch(r"#\d+", k) for k in keys):
+                return [fix(node[f"#{i}"]) for i in range(len(keys))]
+            return {k: fix(v) for k, v in node.items()}
+        return node
+
+    tree = fix(root)
+    if template is not None:
+        # restore tuples/list distinction + leaf placement from template
+        leaves, treedef = jax.tree.flatten(template)
+        new_leaves = jax.tree.leaves(tree)
+        if len(leaves) != len(new_leaves):
+            raise ValueError("checkpoint does not match template structure")
+        return jax.tree.unflatten(treedef, new_leaves)
+    return tree
+
+
+def save_pytree(path: str, tree) -> None:
+    flat = _flatten_with_paths(jax.tree.map(np.asarray, tree))
+    dirn = os.path.dirname(os.path.abspath(path)) or "."
+    os.makedirs(dirn, exist_ok=True)
+    fd, tmp = tempfile.mkstemp(dir=dirn, suffix=".tmp.npz")
+    os.close(fd)
+    try:
+        np.savez(tmp, **flat)
+        os.replace(tmp, path)
+    finally:
+        if os.path.exists(tmp):
+            os.unlink(tmp)
+
+
+def load_pytree(path: str, template=None):
+    with np.load(path) as z:
+        flat = {k: z[k] for k in z.files}
+    return _unflatten_from_paths(flat, template)
+
+
+class Checkpointer:
+    """Step-indexed checkpoint directory with retention."""
+
+    def __init__(self, directory: str, keep: int = 3):
+        self.directory = directory
+        self.keep = keep
+        os.makedirs(directory, exist_ok=True)
+
+    def _path(self, step: int) -> str:
+        return os.path.join(self.directory, f"ckpt_{step:08d}.npz")
+
+    def save(self, step: int, tree, metadata: Optional[dict] = None) -> str:
+        path = self._path(step)
+        save_pytree(path, tree)
+        if metadata is not None:
+            with open(path + ".json", "w") as f:
+                json.dump(metadata, f)
+        self._gc()
+        return path
+
+    def steps(self):
+        out = []
+        for f in os.listdir(self.directory):
+            m = re.fullmatch(r"ckpt_(\d+)\.npz", f)
+            if m:
+                out.append(int(m.group(1)))
+        return sorted(out)
+
+    def latest_step(self) -> Optional[int]:
+        s = self.steps()
+        return s[-1] if s else None
+
+    def restore(self, template=None, step: Optional[int] = None):
+        step = step if step is not None else self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints in {self.directory}")
+        tree = load_pytree(self._path(step), template)
+        meta_path = self._path(step) + ".json"
+        metadata = None
+        if os.path.exists(meta_path):
+            with open(meta_path) as f:
+                metadata = json.load(f)
+        return tree, step, metadata
+
+    def _gc(self):
+        steps = self.steps()
+        for s in steps[: -self.keep]:
+            for suffix in ("", ".json"):
+                p = self._path(s) + suffix
+                if os.path.exists(p):
+                    os.unlink(p)

@@ -1,0 +1,45 @@
+"""Architecture registry: ``get_config(arch_id)`` / ``list_archs()``.
+
+Every assigned architecture is a selectable config (``--arch <id>`` in the
+launchers).  Each module cites its source paper / model card.
+"""
+
+from __future__ import annotations
+
+import importlib
+
+from repro.configs.base import (MLAConfig, ModelConfig, ShapeConfig,
+                                SSMConfig, SHAPES, TRAIN_4K, PREFILL_32K,
+                                DECODE_32K, LONG_500K)
+
+_ARCH_MODULES = {
+    "jamba-v0.1-52b": "repro.configs.jamba_v0_1_52b",
+    "deepseek-v3-671b": "repro.configs.deepseek_v3_671b",
+    "moonshot-v1-16b-a3b": "repro.configs.moonshot_v1_16b_a3b",
+    "mamba2-2.7b": "repro.configs.mamba2_2_7b",
+    "llama4-scout-17b-a16e": "repro.configs.llama4_scout_17b_a16e",
+    "qwen3-14b": "repro.configs.qwen3_14b",
+    "seamless-m4t-medium": "repro.configs.seamless_m4t_medium",
+    "gemma-2b": "repro.configs.gemma_2b",
+    "internvl2-26b": "repro.configs.internvl2_26b",
+    "qwen2-7b": "repro.configs.qwen2_7b",
+}
+
+
+def list_archs():
+    return sorted(_ARCH_MODULES)
+
+
+def get_config(arch: str) -> ModelConfig:
+    if arch not in _ARCH_MODULES:
+        raise KeyError(f"unknown arch {arch!r}; known: {list_archs()}")
+    return importlib.import_module(_ARCH_MODULES[arch]).CONFIG
+
+
+def get_shape(name: str) -> ShapeConfig:
+    return SHAPES[name]
+
+
+__all__ = ["ModelConfig", "ShapeConfig", "MLAConfig", "SSMConfig",
+           "get_config", "get_shape", "list_archs", "SHAPES",
+           "TRAIN_4K", "PREFILL_32K", "DECODE_32K", "LONG_500K"]

@@ -1,0 +1,27 @@
+"""The paper's primary contribution: DQRE-SCnet client selection.
+
+Spectral clustering (Algorithm I), the Deep-Q ensemble (current + target
+networks), weight embeddings, and the four selection policies (FedAvg /
+K-Center / FAVOR baselines + DQRE-SCnet).
+"""
+
+from repro.core.spectral import (affinity_matrix, normalized_laplacian,
+                                 spectral_embedding, spectral_cluster,
+                                 eigengap_k)
+from repro.core.kmeans import kmeans, pairwise_sq_dists
+from repro.core.dqn import DQNAgent, DQNConfig, qnet_init, qnet_apply
+from repro.core.embedding import WeightEmbedder, flatten_pytree, pca_embed
+from repro.core.selection import (POLICIES, make_policy, favor_reward,
+                                  RoundState, Feedback, SelectionPolicy,
+                                  RandomSelection, KCenterSelection,
+                                  FavorSelection, DQREScSelection)
+
+__all__ = [
+    "affinity_matrix", "normalized_laplacian", "spectral_embedding",
+    "spectral_cluster", "eigengap_k", "kmeans", "pairwise_sq_dists",
+    "DQNAgent", "DQNConfig", "qnet_init", "qnet_apply",
+    "WeightEmbedder", "flatten_pytree", "pca_embed",
+    "POLICIES", "make_policy", "favor_reward", "RoundState", "Feedback",
+    "SelectionPolicy", "RandomSelection", "KCenterSelection",
+    "FavorSelection", "DQREScSelection",
+]

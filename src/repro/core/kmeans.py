@@ -1,0 +1,60 @@
+"""K-means(++) in JAX — the final stage of Algorithm I (spectral clustering).
+
+Fixed-iteration ``lax.fori_loop`` so it jits cleanly; k-means++ seeding via
+``jax.random.choice`` over squared-distance weights.  Distances route
+through the same pairwise-distance op the Pallas affinity kernel
+implements (``kernels/ops.pairwise_sq_dists`` when enabled).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+
+def pairwise_sq_dists(x, y):
+    """(n, d), (m, d) -> (n, m) squared euclidean distances."""
+    xn = jnp.sum(x * x, axis=-1)[:, None]
+    yn = jnp.sum(y * y, axis=-1)[None, :]
+    return jnp.maximum(xn + yn - 2.0 * (x @ y.T), 0.0)
+
+
+def kmeans_plus_plus_init(key, x, k: int):
+    n = x.shape[0]
+    first = jax.random.randint(key, (), 0, n)
+    centers0 = jnp.zeros((k, x.shape[1]), x.dtype).at[0].set(x[first])
+
+    def body(i, carry):
+        centers, key = carry
+        key, sub = jax.random.split(key)
+        d = pairwise_sq_dists(x, centers)                  # (n, k)
+        mask = jnp.arange(k)[None, :] < i
+        dmin = jnp.min(jnp.where(mask, d, jnp.inf), axis=1)
+        probs = dmin / jnp.maximum(jnp.sum(dmin), 1e-12)
+        idx = jax.random.choice(sub, n, p=probs)
+        return centers.at[i].set(x[idx]), key
+
+    centers, _ = jax.lax.fori_loop(1, k, body, (centers0, key))
+    return centers
+
+
+@functools.partial(jax.jit, static_argnames=("k", "iters"))
+def kmeans(key, x, k: int, iters: int = 25):
+    """Lloyd iterations.  Returns (assignments (n,), centers (k, d))."""
+    centers = kmeans_plus_plus_init(key, x, k)
+
+    def body(_, centers):
+        d = pairwise_sq_dists(x, centers)
+        assign = jnp.argmin(d, axis=1)                     # (n,)
+        onehot = jax.nn.one_hot(assign, k, dtype=x.dtype)  # (n, k)
+        counts = jnp.sum(onehot, axis=0)                   # (k,)
+        sums = onehot.T @ x                                # (k, d)
+        new = sums / jnp.maximum(counts[:, None], 1.0)
+        # keep old center when a cluster empties
+        return jnp.where(counts[:, None] > 0, new, centers)
+
+    centers = jax.lax.fori_loop(0, iters, body, centers)
+    assign = jnp.argmin(pairwise_sq_dists(x, centers), axis=1)
+    return assign, centers

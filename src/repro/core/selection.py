@@ -1,0 +1,234 @@
+"""Client-selection policies: FedAvg(random), K-Center, FAVOR, DQRE-SCnet.
+
+The paper's baselines (Table 2) and its contribution, behind one
+interface.  A policy sees a ``RoundState`` (client weight-delta embeddings
++ global-model embedding) and returns the cohort for the next
+communication round; learning policies also consume a reward after the
+round (FAVOR-style  r = Ξ^(acc − target) − 1,  Ξ = 64).
+
+DQRE-SCnet (the paper, Algorithm II): spectrally cluster the client
+embeddings (Algorithm I), then a Deep-Q agent (current + target nets)
+chooses *clusters*; clients are drawn without replacement from the chosen
+clusters ("rewarded users"), de-biasing the cohort under non-IID skew.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import numpy as np
+import jax
+
+from repro.core.dqn import DQNAgent, DQNConfig
+from repro.core.kmeans import pairwise_sq_dists
+from repro.core.spectral import spectral_cluster
+
+
+@dataclasses.dataclass
+class RoundState:
+    round_idx: int
+    client_embeds: np.ndarray          # (N, dim)
+    global_embed: np.ndarray           # (dim,)
+    prev_accuracy: float
+
+
+@dataclasses.dataclass
+class Feedback:
+    accuracy: float
+    reward: float
+    selected: np.ndarray
+
+
+class SelectionPolicy:
+    name = "base"
+
+    def __init__(self, num_clients: int, clients_per_round: int,
+                 embed_dim: int, seed: int = 0):
+        self.num_clients = num_clients
+        self.clients_per_round = clients_per_round
+        self.embed_dim = embed_dim
+        self.rng = np.random.default_rng(seed)
+
+    def select(self, state: RoundState) -> np.ndarray:
+        raise NotImplementedError
+
+    def update(self, state: RoundState, next_state: RoundState,
+               feedback: Feedback) -> None:
+        pass
+
+
+class RandomSelection(SelectionPolicy):
+    """FedAvg: uniform random cohort (McMahan et al.)."""
+    name = "fedavg"
+
+    def select(self, state: RoundState) -> np.ndarray:
+        return self.rng.choice(self.num_clients, self.clients_per_round,
+                               replace=False)
+
+
+class KCenterSelection(SelectionPolicy):
+    """Greedy k-center (farthest-point) over client embeddings."""
+    name = "kcenter"
+
+    def select(self, state: RoundState) -> np.ndarray:
+        x = state.client_embeds
+        n, k = self.num_clients, self.clients_per_round
+        chosen = [int(self.rng.integers(n))]
+        d2 = np.asarray(pairwise_sq_dists(x, x[chosen]))[:, 0]
+        while len(chosen) < k:
+            nxt = int(np.argmax(d2))
+            chosen.append(nxt)
+            d2 = np.minimum(
+                d2, np.asarray(pairwise_sq_dists(x, x[nxt:nxt + 1]))[:, 0])
+        return np.asarray(chosen)
+
+
+class FavorSelection(SelectionPolicy):
+    """FAVOR (Wang et al. 2020): per-client DQN, no clustering.
+
+    State = [global embed ‖ all client embeds]; the Q head scores each
+    client; the cohort is the top-K by Q with ε-greedy exploration.
+    """
+    name = "favor"
+
+    def __init__(self, num_clients, clients_per_round, embed_dim, seed=0,
+                 dqn_overrides: Optional[dict] = None):
+        super().__init__(num_clients, clients_per_round, embed_dim, seed)
+        cfg = DQNConfig(state_dim=(num_clients + 1) * embed_dim,
+                        num_actions=num_clients,
+                        **(dqn_overrides or {}))
+        self.agent = DQNAgent(jax.random.PRNGKey(seed), cfg)
+
+    def _state_vec(self, state: RoundState) -> np.ndarray:
+        return np.concatenate([state.global_embed.ravel(),
+                               state.client_embeds.ravel()]).astype(np.float32)
+
+    def select(self, state: RoundState) -> np.ndarray:
+        s = self._state_vec(state)
+        self.agent.steps += 1
+        q = self.agent.q_values(s)
+        k = self.clients_per_round
+        eps = self.agent.epsilon()
+        n_rand = int(round(eps * k))
+        top = np.argsort(-q)
+        picked = list(top[: k - n_rand])
+        if n_rand:
+            rest = np.setdiff1d(np.arange(self.num_clients), picked)
+            picked += list(self.rng.choice(rest, n_rand, replace=False))
+        return np.asarray(picked[:k])
+
+    def update(self, state, next_state, feedback):
+        s, s2 = self._state_vec(state), self._state_vec(next_state)
+        for a in feedback.selected:
+            self.agent.observe(s, int(a), feedback.reward, s2)
+        self.agent.train_step(self.rng)
+
+
+class DQREScSelection(SelectionPolicy):
+    """DQRE-SCnet (the paper): spectral clustering + cluster-level DQN."""
+    name = "dqre_sc"
+
+    def __init__(self, num_clients, clients_per_round, embed_dim, seed=0,
+                 num_clusters: int = 8, use_pallas: bool = False,
+                 auto_k: bool = False,
+                 dqn_overrides: Optional[dict] = None):
+        super().__init__(num_clients, clients_per_round, embed_dim, seed)
+        self.num_clusters = num_clusters
+        self.use_pallas = use_pallas
+        # paper §3.4: pick k by the first large eigengap of L_norm, capped
+        # by num_clusters (the DQN action space stays fixed; clusters
+        # beyond k_hat are simply empty that round).
+        self.auto_k = auto_k
+        cfg = DQNConfig(state_dim=(num_clusters + 1) * embed_dim,
+                        num_actions=num_clusters,
+                        **(dqn_overrides or {}))
+        self.agent = DQNAgent(jax.random.PRNGKey(seed), cfg)
+        self._key = jax.random.PRNGKey(seed + 1)
+        self._last_assign: Optional[np.ndarray] = None
+        self._last_state_vec: Optional[np.ndarray] = None
+        self._last_actions: Optional[list] = None
+
+    # -- Algorithm I: cluster the client embeddings -------------------------
+    def _cluster(self, embeds: np.ndarray):
+        self._key, sub = jax.random.split(self._key)
+        k = self.num_clusters
+        if self.auto_k:
+            from repro.core.spectral import (affinity_matrix, eigengap_k,
+                                             spectral_embedding)
+            import jax.numpy as jnp
+            a = affinity_matrix(jnp.asarray(embeds, np.float32),
+                                use_pallas=self.use_pallas)
+            _, evals = spectral_embedding(a, self.num_clusters)
+            k = int(np.clip(int(eigengap_k(evals, self.num_clusters)),
+                            2, self.num_clusters))
+        assign, _, _ = spectral_cluster(
+            sub, np.asarray(embeds, np.float32), k,
+            use_pallas=self.use_pallas)
+        return np.asarray(assign)
+
+    def _state_vec(self, state: RoundState, assign: np.ndarray) -> np.ndarray:
+        cents = np.zeros((self.num_clusters, self.embed_dim), np.float32)
+        for c in range(self.num_clusters):
+            m = assign == c
+            if m.any():
+                cents[c] = state.client_embeds[m].mean(axis=0)
+        return np.concatenate([state.global_embed.ravel(),
+                               cents.ravel()]).astype(np.float32)
+
+    # -- Algorithm II: DQN chooses clusters, clients drawn from them --------
+    def select(self, state: RoundState) -> np.ndarray:
+        assign = self._cluster(state.client_embeds)
+        s = self._state_vec(state, assign)
+        self._last_assign, self._last_state_vec = assign, s
+        self.agent.steps += 1
+        q = self.agent.q_values(s)
+        eps = self.agent.epsilon()
+
+        pools = {c: list(np.flatnonzero(assign == c))
+                 for c in range(self.num_clusters)}
+        for pool in pools.values():
+            self.rng.shuffle(pool)
+        picked, actions = [], []
+        order = np.argsort(-q)
+        while len(picked) < self.clients_per_round:
+            if self.rng.random() < eps:
+                c = int(self.rng.integers(self.num_clusters))
+            else:
+                c = int(next((c for c in order if pools[c]), order[0]))
+            if not pools[c]:
+                nonempty = [cc for cc in range(self.num_clusters) if pools[cc]]
+                if not nonempty:
+                    break
+                c = int(self.rng.choice(nonempty))
+            picked.append(pools[c].pop())
+            actions.append(c)
+        self._last_actions = actions
+        return np.asarray(picked)
+
+    def update(self, state, next_state, feedback):
+        assign2 = self._cluster(next_state.client_embeds)
+        s2 = self._state_vec(next_state, assign2)
+        for a in (self._last_actions or []):
+            self.agent.observe(self._last_state_vec, int(a),
+                               feedback.reward, s2)
+        self.agent.train_step(self.rng)
+
+
+POLICIES = {
+    "fedavg": RandomSelection,
+    "kcenter": KCenterSelection,
+    "favor": FavorSelection,
+    "dqre_sc": DQREScSelection,
+}
+
+
+def make_policy(name: str, num_clients: int, clients_per_round: int,
+                embed_dim: int, seed: int = 0, **kw) -> SelectionPolicy:
+    return POLICIES[name](num_clients, clients_per_round, embed_dim,
+                          seed=seed, **kw)
+
+
+def favor_reward(accuracy: float, target: float, xi: float = 64.0) -> float:
+    """FAVOR's reward shaping — also used by DQRE-SC (paper §3.3)."""
+    return float(xi ** (accuracy - target) - 1.0)

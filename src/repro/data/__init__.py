@@ -1,0 +1,5 @@
+from repro.data.pipeline import (TokenDataConfig, synthetic_token_batches,
+                                 make_batch_iterator, batch_specs)
+
+__all__ = ["TokenDataConfig", "synthetic_token_batches",
+           "make_batch_iterator", "batch_specs"]

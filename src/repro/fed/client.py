@@ -1,0 +1,57 @@
+"""Client-side local training, vmapped across the selected cohort.
+
+All selected clients train **in parallel** as one jitted computation: the
+global model is broadcast, per-client data is stacked along a leading
+cohort axis, and ``jax.vmap`` maps the local-SGD scan over it.  On a real
+mesh the cohort axis shards over ``data`` (this is the datacenter-FL
+simulation pattern — DESIGN.md §3); on this container it runs on CPU.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.cnn import cnn_loss
+
+
+def sgd_tree(params, grads, lr):
+    return jax.tree.map(lambda p, g: p - lr * g, params, grads)
+
+
+def local_train(loss_fn, params, xs, ys, rng, lr):
+    """Local SGD.  xs: (steps, bs, ...), ys: (steps, bs)."""
+
+    def step(carry, xy):
+        params, rng = carry
+        rng, sub = jax.random.split(rng)
+        (loss, _), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+            params, {"x": xy[0], "y": xy[1]}, sub)
+        return (sgd_tree(params, grads, lr), rng), loss
+
+    (params, _), losses = jax.lax.scan(step, (params, rng), (xs, ys))
+    return params, jnp.mean(losses)
+
+
+@functools.partial(jax.jit, static_argnames=("lr",))
+def local_train_cohort(params, xs, ys, rngs, *, lr: float):
+    """vmapped local training.
+
+    params: global model pytree (broadcast).
+    xs: (K, steps, bs, H, W, C); ys: (K, steps, bs); rngs: (K, 2) keys.
+    Returns (stacked client params with leading K axis, (K,) mean losses).
+    """
+    def one(x, y, r):
+        return local_train(cnn_loss, params, x, y, r, lr)
+
+    return jax.vmap(one)(xs, ys, rngs)
+
+
+@jax.jit
+def evaluate(params, x, y):
+    """Full-batch eval: returns (accuracy, mean loss, logits)."""
+    loss, logits = cnn_loss(params, {"x": x, "y": y})
+    acc = jnp.mean((jnp.argmax(logits, axis=-1) == y).astype(jnp.float32))
+    return acc, loss, logits

@@ -1,0 +1,53 @@
+"""Evaluation criteria for the paper's Table 3.
+
+Balanced accuracy, accuracy, macro recall, Cohen's kappa, macro one-vs-rest
+AUC (rank-based, no sklearn), plus the "feature rate" (the paper's term;
+we read it as macro precision, the closest standard quantity).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+
+def confusion(y_true: np.ndarray, y_pred: np.ndarray, k: int) -> np.ndarray:
+    cm = np.zeros((k, k), np.int64)
+    np.add.at(cm, (y_true, y_pred), 1)
+    return cm
+
+
+def classification_metrics(y_true: np.ndarray, logits: np.ndarray) -> dict:
+    k = logits.shape[-1]
+    y_pred = np.argmax(logits, axis=-1)
+    cm = confusion(y_true, y_pred, k)
+    total = cm.sum()
+    acc = np.trace(cm) / max(total, 1)
+
+    per_class_recall = np.divide(np.diag(cm), cm.sum(axis=1),
+                                 out=np.zeros(k), where=cm.sum(axis=1) > 0)
+    per_class_prec = np.divide(np.diag(cm), cm.sum(axis=0),
+                               out=np.zeros(k), where=cm.sum(axis=0) > 0)
+    balanced_acc = per_class_recall.mean()
+    recall = per_class_recall.mean()
+    precision = per_class_prec.mean()
+
+    # Cohen's kappa
+    pe = float((cm.sum(axis=0) * cm.sum(axis=1)).sum()) / max(total ** 2, 1)
+    kappa = (acc - pe) / max(1 - pe, 1e-12)
+
+    # macro one-vs-rest AUC via the rank statistic
+    aucs = []
+    for c in range(k):
+        pos = logits[y_true == c, c]
+        neg = logits[y_true != c, c]
+        if len(pos) == 0 or len(neg) == 0:
+            continue
+        ranks = np.argsort(np.argsort(np.concatenate([pos, neg])))
+        auc = (ranks[: len(pos)].sum() - len(pos) * (len(pos) - 1) / 2) \
+            / (len(pos) * len(neg))
+        aucs.append(auc)
+    auc = float(np.mean(aucs)) if aucs else 0.5
+
+    return {"balanced_accuracy": float(balanced_acc), "accuracy": float(acc),
+            "recall": float(recall), "kappa": float(kappa),
+            "precision": float(precision), "auc": auc}

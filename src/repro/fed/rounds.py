@@ -1,0 +1,177 @@
+"""The federated communication-round driver (Algorithm II outer loop).
+
+One ``FederatedRunner`` = one experiment: a dataset partitioned non-IID
+across N simulated clients, a selection policy, and the FedAvg server.
+Each round: select cohort -> parallel local SGD (vmapped) -> aggregate ->
+evaluate -> reward the policy.  Rounds-to-target-accuracy is the paper's
+headline metric (Table 2).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import List, Optional
+
+import jax
+import numpy as np
+
+from repro.core.embedding import WeightEmbedder
+from repro.core.selection import (Feedback, RoundState, favor_reward,
+                                  make_policy)
+from repro.fed.client import evaluate, local_train_cohort
+from repro.fed.datasets import make_dataset
+from repro.fed.metrics import classification_metrics
+from repro.fed.partition import partition_non_iid
+from repro.fed.server import fedavg_aggregate, weight_delta_embedding
+from repro.models.cnn import cnn_init
+
+
+@dataclasses.dataclass
+class RoundResult:
+    round_idx: int
+    accuracy: float
+    loss: float
+    reward: float
+    selected: np.ndarray
+    seconds: float
+
+
+@dataclasses.dataclass
+class RunnerConfig:
+    dataset: str = "mnist"
+    num_clients: int = 100
+    clients_per_round: int = 10
+    sigma: float = 0.5
+    local_steps: int = 10
+    batch_size: int = 16
+    lr: float = 0.05
+    embed_dim: int = 8
+    num_clusters: int = 8
+    target_accuracy: float = 0.85
+    eval_size: int = 1024
+    train_size: Optional[int] = 8192       # subsample for CPU tractability
+    seed: int = 0
+    policy: str = "fedavg"
+    use_pallas: bool = False
+    policy_kwargs: Optional[dict] = None
+
+
+class FederatedRunner:
+    def __init__(self, cfg: RunnerConfig):
+        self.cfg = cfg
+        rng = np.random.default_rng(cfg.seed)
+        self.rng = rng
+        data = make_dataset(cfg.dataset, seed=cfg.seed,
+                            train_size=cfg.train_size,
+                            test_size=cfg.eval_size)
+        self.spec = data["spec"]
+        self.x_train, self.y_train = data["x_train"], data["y_train"]
+        self.x_test, self.y_test = data["x_test"], data["y_test"]
+        self.shards = partition_non_iid(self.y_train, cfg.num_clients,
+                                        cfg.sigma, seed=cfg.seed)
+        self.shard_sizes = np.array([len(s) for s in self.shards], np.float32)
+
+        key = jax.random.PRNGKey(cfg.seed)
+        self.global_params = cnn_init(
+            key, in_channels=self.spec.channels,
+            num_classes=self.spec.num_classes,
+            image_size=self.spec.image_size)
+        self.embedder = WeightEmbedder(self.global_params,
+                                       dim=cfg.embed_dim, seed=cfg.seed)
+        self.client_embeds = np.zeros((cfg.num_clients, cfg.embed_dim),
+                                      np.float32)
+        kw = dict(cfg.policy_kwargs or {})
+        if cfg.policy == "dqre_sc":
+            kw.setdefault("num_clusters", cfg.num_clusters)
+            kw.setdefault("use_pallas", cfg.use_pallas)
+        self.policy = make_policy(cfg.policy, cfg.num_clients,
+                                  cfg.clients_per_round, cfg.embed_dim,
+                                  seed=cfg.seed, **kw)
+        self.prev_acc = 0.0
+        self.round_idx = 0
+        self.history: List[RoundResult] = []
+        self._warmed_up = False
+
+    # ------------------------------------------------------------------
+    def _client_batches(self, client_ids):
+        c = self.cfg
+        xs, ys = [], []
+        for cid in client_ids:
+            idx = self.rng.choice(self.shards[cid],
+                                  size=c.local_steps * c.batch_size,
+                                  replace=True)
+            xs.append(self.x_train[idx].reshape(
+                c.local_steps, c.batch_size, *self.x_train.shape[1:]))
+            ys.append(self.y_train[idx].reshape(c.local_steps, c.batch_size))
+        return np.stack(xs), np.stack(ys)
+
+    def _train_cohort(self, client_ids):
+        xs, ys = self._client_batches(client_ids)
+        rngs = jax.random.split(jax.random.PRNGKey(
+            self.cfg.seed * 100_003 + self.round_idx), len(client_ids))
+        return local_train_cohort(self.global_params, xs, ys, rngs,
+                                  lr=self.cfg.lr)
+
+    def warmup(self):
+        """One local pass on EVERY client to initialize the weight-state
+        embeddings (FAVOR's initialization round; paper §3.4)."""
+        ids = np.arange(self.cfg.num_clients)
+        for lo in range(0, len(ids), 32):          # chunk to bound memory
+            chunk = ids[lo: lo + 32]
+            stacked, _ = self._train_cohort(chunk)
+            self.client_embeds[chunk] = weight_delta_embedding(
+                self.embedder, stacked, self.global_params)
+        self._warmed_up = True
+
+    def _round_state(self) -> RoundState:
+        return RoundState(self.round_idx, self.client_embeds.copy(),
+                          self.embedder(self.global_params),
+                          self.prev_acc)
+
+    # ------------------------------------------------------------------
+    def run_round(self) -> RoundResult:
+        if not self._warmed_up:
+            self.warmup()
+        c = self.cfg
+        t0 = time.time()
+        state = self._round_state()
+        selected = np.asarray(self.policy.select(state))
+
+        stacked, losses = self._train_cohort(selected)
+        self.client_embeds[selected] = weight_delta_embedding(
+            self.embedder, stacked, self.global_params)
+        weights = self.shard_sizes[selected]
+        self.global_params = fedavg_aggregate(stacked, weights)
+
+        acc, loss, _ = evaluate(self.global_params, self.x_test, self.y_test)
+        acc = float(acc)
+        reward = favor_reward(acc, c.target_accuracy)
+        next_state = self._round_state()
+        self.policy.update(state, next_state,
+                           Feedback(acc, reward, selected))
+        self.prev_acc = acc
+        res = RoundResult(self.round_idx, acc, float(loss), reward, selected,
+                          time.time() - t0)
+        self.history.append(res)
+        self.round_idx += 1
+        return res
+
+    def run(self, num_rounds: int, stop_at_target: bool = False):
+        for _ in range(num_rounds):
+            res = self.run_round()
+            if stop_at_target and res.accuracy >= self.cfg.target_accuracy:
+                break
+        return self.history
+
+    # ------------------------------------------------------------------
+    def rounds_to_accuracy(self, target: Optional[float] = None):
+        target = target if target is not None else self.cfg.target_accuracy
+        for res in self.history:
+            if res.accuracy >= target:
+                return res.round_idx + 1
+        return None
+
+    def final_metrics(self) -> dict:
+        _, _, logits = evaluate(self.global_params, self.x_test, self.y_test)
+        return classification_metrics(self.y_test, np.asarray(logits))

@@ -1,0 +1,32 @@
+"""Server-side aggregation (FedAvg) and weight-delta embeddings."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+@jax.jit
+def fedavg_aggregate(stacked_params, weights):
+    """Weighted FedAvg.  stacked_params: pytree with leading cohort axis K;
+    weights: (K,) — normalized inside (client shard sizes, per McMahan)."""
+    w = weights / jnp.maximum(jnp.sum(weights), 1e-12)
+
+    def mean(x):
+        wb = w.reshape((-1,) + (1,) * (x.ndim - 1)).astype(x.dtype)
+        return jnp.sum(x * wb, axis=0)
+
+    return jax.tree.map(mean, stacked_params)
+
+
+@jax.jit
+def params_delta(stacked_params, global_params):
+    """Per-client parameter deltas vs the global model."""
+    return jax.tree.map(lambda c, g: c - g[None], stacked_params,
+                        jax.tree.map(jnp.asarray, global_params))
+
+
+def weight_delta_embedding(embedder, stacked_params, global_params):
+    """Embed each cohort member's weight delta -> (K, dim) numpy."""
+    deltas = params_delta(stacked_params, global_params)
+    return embedder.embed_many(deltas)

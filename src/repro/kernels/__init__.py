@@ -1,0 +1,16 @@
+"""Pallas TPU kernels for the framework's compute hot-spots.
+
+Layout per kernel: ``<name>_pallas.py`` (pl.pallas_call + BlockSpec VMEM
+tiling), ``ops.py`` (jitted wrappers with backend selection), ``ref.py``
+(pure-jnp oracles the tests assert against).
+
+Kernels:
+  * affinity_pallas        -- pairwise distances / fused RBF affinity
+                              (spectral clustering hotspot, Algorithm I)
+  * flash_attention_pallas -- blocked online-softmax GQA attention
+  * ssd_pallas             -- Mamba2 SSD intra-chunk dual form
+"""
+
+from repro.kernels import ops, ref
+
+__all__ = ["ops", "ref"]

@@ -1,0 +1,135 @@
+"""Pallas TPU kernel: blocked flash attention (GQA, causal, sliding window).
+
+TPU adaptation of the FlashAttention schedule: the grid is
+(batch·kv_head·group, q_blocks, kv_blocks) with the KV dimension innermost;
+online-softmax statistics (m, l) and the output accumulator live in VMEM
+scratch and persist across the KV grid steps ("revisiting" pattern).
+BlockSpecs tile Q into (BQ, head_dim) and K/V into (BK, head_dim) VMEM
+panels — head_dim ≤ 256 for every assigned arch, so a (BQ=256, BK=512)
+tile set stays well inside the ~16 MB v5e VMEM while keeping the
+score matmul MXU-aligned (multiples of 128).
+
+Causal + sliding-window masking is applied per element, and *entirely
+masked KV blocks are skipped* with ``pl.when`` — that is what restores the
+2× triangular-FLOP saving the jnp blocked path (models/attention.py)
+cannot express (DESIGN.md §3, EXPERIMENTS.md §Perf).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+                  scale, causal, window, block_q, block_k, seq_k, num_kv):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q_start = qi * block_q
+    k_start = ki * block_k
+
+    # ---- block-level skip: fully-masked KV blocks do no work ------------
+    live = k_start < seq_k
+    if causal:
+        live = jnp.logical_and(live, k_start <= q_start + block_q - 1)
+    if window is not None:
+        live = jnp.logical_and(live,
+                               k_start + block_k - 1 > q_start - window)
+
+    @pl.when(live)
+    def _compute():
+        q = q_ref[0].astype(jnp.float32)               # (BQ, dh)
+        k = k_ref[0].astype(jnp.float32)               # (BK, dh)
+        v = v_ref[0].astype(jnp.float32)               # (BK, dv)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        qp = q_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+        kp = k_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        mask = kp < seq_k
+        if causal:
+            mask = jnp.logical_and(mask, kp <= qp)
+        if window is not None:
+            mask = jnp.logical_and(mask, kp > qp - window)
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_scr[...]                            # (BQ, 1)
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        corr = jnp.exp(m_prev - m_new)                 # (BQ, 1)
+        l_scr[...] = l_scr[...] * corr + jnp.sum(p, axis=1, keepdims=True)
+        acc_scr[...] = acc_scr[...] * corr + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+        m_scr[...] = m_new
+
+    @pl.when(ki == num_kv - 1)
+    def _finish():
+        l = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0] = (acc_scr[...] / l).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "scale",
+                                             "block_q", "block_k",
+                                             "interpret"))
+def flash_attention_pallas(q, k, v, *, causal: bool = True, window=None,
+                           scale=None, block_q: int = 256,
+                           block_k: int = 512, interpret: bool = False):
+    """q: (B,S,H,dh); k/v: (B,T,K,dv); H = K*G.  Returns (B,S,H,dv)."""
+    B, S, H, dh = q.shape
+    T, K = k.shape[1], k.shape[2]
+    G = H // K
+    dv = v.shape[-1]
+    scale = scale if scale is not None else 1.0 / np.sqrt(dh)
+
+    block_q = min(block_q, max(S, 8))
+    block_k = min(block_k, max(T, 8))
+    pq, pk = (-S) % block_q, (-T) % block_k
+    qq = jnp.pad(q, ((0, 0), (0, pq), (0, 0), (0, 0)))
+    kk = jnp.pad(k, ((0, 0), (0, pk), (0, 0), (0, 0)))
+    vv = jnp.pad(v, ((0, 0), (0, pk), (0, 0), (0, 0)))
+    Sq, Tk = S + pq, T + pk
+
+    # (B, S, K, G, dh) -> (B*K*G, S, dh);  (B, T, K, d) -> (B*K, T, d)
+    qq = qq.reshape(B, Sq, K, G, dh).transpose(0, 2, 3, 1, 4)
+    qq = qq.reshape(B * K * G, Sq, dh)
+    kk = kk.transpose(0, 2, 1, 3).reshape(B * K, Tk, dh)
+    vv = vv.transpose(0, 2, 1, 3).reshape(B * K, Tk, dv)
+
+    nq, nk = Sq // block_q, Tk // block_k
+    kern = functools.partial(
+        _flash_kernel, scale=float(scale), causal=causal,
+        window=window, block_q=block_q, block_k=block_k, seq_k=T,
+        num_kv=nk)
+    out = pl.pallas_call(
+        kern,
+        grid=(B * K * G, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, block_q, dh), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, block_k, dh), lambda b, i, j, G=G: (b // G, j, 0)),
+            pl.BlockSpec((1, block_k, dv), lambda b, i, j, G=G: (b // G, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, dv), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B * K * G, Sq, dv), v.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, dv), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qq, kk, vv)
+
+    out = out.reshape(B, K, G, Sq, dv).transpose(0, 3, 1, 2, 4)
+    return out.reshape(B, Sq, H, dv)[:, :S]

@@ -1,0 +1,47 @@
+"""Jitted public wrappers for the Pallas kernels.
+
+Backend selection: on TPU the compiled kernels run natively; elsewhere
+(this CPU container) ``interpret=True`` executes the kernel bodies in
+Python for correctness validation.  ``set_use_pallas`` flips the model
+substrate between the pure-jnp paths and the kernels globally.
+"""
+
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.affinity_pallas import (pairwise_sq_dists_pallas,
+                                           rbf_affinity_pallas)
+from repro.kernels.flash_attention_pallas import flash_attention_pallas
+from repro.kernels.ssd_pallas import ssd_chunk_pallas
+
+_USE_PALLAS = False
+
+
+def set_use_pallas(flag: bool) -> None:
+    global _USE_PALLAS
+    _USE_PALLAS = bool(flag)
+
+
+def use_pallas() -> bool:
+    return _USE_PALLAS
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def pairwise_sq_dists(x, y, **kw):
+    return pairwise_sq_dists_pallas(x, y, interpret=_interpret(), **kw)
+
+
+def rbf_affinity(x, gamma, **kw):
+    return rbf_affinity_pallas(x, gamma, interpret=_interpret(), **kw)
+
+
+def flash_attention(q, k, v, **kw):
+    return flash_attention_pallas(q, k, v, interpret=_interpret(), **kw)
+
+
+def ssd_chunk(xdt, cs, Bm, Cm, **kw):
+    return ssd_chunk_pallas(xdt, cs, Bm, Cm, interpret=_interpret(), **kw)

@@ -1,0 +1,81 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+Each function is the semantic ground truth the kernels are validated
+against (tests sweep shapes/dtypes and ``assert_allclose``).  These are
+deliberately naive — O(n²) materialization is fine here; the kernels
+exist precisely because the naive forms don't scale.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+NEG_INF = -1e30
+
+
+def pairwise_sq_dists_ref(x, y):
+    """(n, d), (m, d) -> (n, m) squared euclidean distances, f32."""
+    x = x.astype(jnp.float32)
+    y = y.astype(jnp.float32)
+    diff = x[:, None, :] - y[None, :, :]
+    return jnp.sum(diff * diff, axis=-1)
+
+
+def rbf_affinity_ref(x, gamma: float):
+    """exp(-gamma * d2) with zero diagonal (spectral-clustering affinity)."""
+    d2 = pairwise_sq_dists_ref(x, x)
+    a = jnp.exp(-gamma * d2)
+    return a * (1.0 - jnp.eye(x.shape[0], dtype=a.dtype))
+
+
+def attention_ref(q, k, v, *, causal=True, window=None, scale=None):
+    """Naive GQA attention.  q: (B,S,H,d), k/v: (B,T,K,dv)."""
+    B, S, H, dh = q.shape
+    T, K = k.shape[1], k.shape[2]
+    G = H // K
+    scale = scale if scale is not None else 1.0 / np.sqrt(dh)
+    qf = q.astype(jnp.float32).reshape(B, S, K, G, dh)
+    kf = k.astype(jnp.float32)
+    s = jnp.einsum("bskgd,btkd->bkgst", qf, kf) * scale
+    qp = jnp.arange(S)[:, None]
+    kp = jnp.arange(T)[None, :]
+    mask = jnp.ones((S, T), bool)
+    if causal:
+        mask &= kp <= qp
+    if window is not None:
+        mask &= kp > qp - window
+    s = jnp.where(mask[None, None, None], s, NEG_INF)
+    w = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgst,btkd->bskgd", w, v.astype(jnp.float32))
+    return out.reshape(B, S, H, v.shape[-1]).astype(v.dtype)
+
+
+def ssd_chunk_ref(xdt, cs, Bm, Cm):
+    """Intra-chunk SSD reference (what the Pallas kernel computes).
+
+    xdt: (B, c, Q, H, P)   inputs pre-multiplied by dt
+    cs:  (B, c, Q, H)      cumulative sum of dt*A within each chunk
+    Bm:  (B, c, Q, G, N)   input projections
+    Cm:  (B, c, Q, G, N)   output projections,  heads grouped H = G*R
+
+    Returns (y_diag (B,c,Q,H,P), states (B,c,H,P,N)).
+    """
+    B, c, Q, H, P = xdt.shape
+    G = Bm.shape[3]
+    R = H // G
+    f32 = jnp.float32
+    x_g = xdt.reshape(B, c, Q, G, R, P).astype(f32)
+    cs_g = cs.reshape(B, c, Q, G, R).astype(f32)
+    att = jnp.einsum("bcqgn,bclgn->bcgql", Cm.astype(f32), Bm.astype(f32))
+    diff = cs_g[:, :, :, :, :, None] - jnp.moveaxis(cs_g, 2, -1)[:, :, None]
+    mask = jnp.tril(jnp.ones((Q, Q), bool))[None, None, :, None, None, :]
+    ldec = jnp.where(mask, jnp.exp(diff), 0.0)
+    m = jnp.einsum("bcgql,bcqgrl->bcqgrl", att, ldec)
+    y_diag = jnp.einsum("bcqgrl,bclgrp->bcqgrp", m, x_g)
+    decay_last = jnp.exp(cs_g[:, :, -1:] - cs_g)
+    states = jnp.einsum("bcqgn,bcqgr,bcqgrp->bcgrpn", Bm.astype(f32),
+                        decay_last, x_g)
+    return (y_diag.reshape(B, c, Q, H, P),
+            states.reshape(B, c, H, P, Bm.shape[-1]))

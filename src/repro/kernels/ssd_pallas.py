@@ -1,0 +1,86 @@
+"""Pallas TPU kernel: Mamba2 SSD intra-chunk block (per-chunk dual form).
+
+TPU adaptation (DESIGN.md §3): the GPU reference implements the SSD scan
+with warp-level parallel prefix; the MXU-friendly dual form instead
+computes, per (batch, chunk, head) grid cell and entirely in VMEM:
+
+    att     = C · Bᵀ                      (Q,Q)  MXU matmul
+    M       = att ⊙ exp(cs_i − cs_j)·1[i≥j]      masked decay
+    y_diag  = M · x·dt                    (Q,P)  MXU matmul
+    state   = (B ⊙ exp(cs_Q − cs)·dt·x)ᵀ contraction -> (P,N)
+
+The sequential inter-chunk recurrence (tiny: (H,P,N) per step) and the
+off-diagonal term stay in jnp (``models/mamba.py``) — they are O(S/Q)
+work, not the hotspot.  Oracle: ``ref.ssd_chunk_ref``.
+
+Block sizes: Q = chunk length (128/256), P = head_dim 64, N = state 128 —
+a (Q=256, N=128, P=64) cell uses ~1 MB of VMEM, far under the 16 MB v5e
+budget, and every matmul dim is a multiple of 64/128.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _ssd_kernel(c_ref, b_ref, x_ref, cs_ref, y_ref, st_ref):
+    c = c_ref[0, 0, :, 0].astype(jnp.float32)          # (Q, N)
+    b = b_ref[0, 0, :, 0].astype(jnp.float32)          # (Q, N)
+    x = x_ref[0, 0, :, 0].astype(jnp.float32)          # (Q, P)
+    cs = cs_ref[0, 0, :, 0].astype(jnp.float32)        # (Q,)
+    Q = x.shape[0]
+
+    att = jax.lax.dot_general(c, b, (((1,), (1,)), ((), ())),
+                              preferred_element_type=jnp.float32)  # (Q,Q)
+    rows = jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 0)
+    cols = jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 1)
+    decay = jnp.exp(cs[:, None] - cs[None, :])
+    m = jnp.where(rows >= cols, att * decay, 0.0)
+    y_ref[0, 0, :, 0] = jax.lax.dot_general(
+        m, x, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+
+    decay_last = jnp.exp(cs[-1] - cs)                  # (Q,)
+    bw = b * decay_last[:, None]                       # (Q, N)
+    st_ref[0, 0, 0] = jax.lax.dot_general(
+        x, bw, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)            # (P, N)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def ssd_chunk_pallas(xdt, cs, Bm, Cm, *, interpret: bool = False):
+    """Intra-chunk SSD.  Shapes as in ``ref.ssd_chunk_ref``:
+
+    xdt (B,c,Q,H,P), cs (B,c,Q,H), Bm/Cm (B,c,Q,G,N) with H = G*R.
+    Returns (y_diag (B,c,Q,H,P) f32, states (B,c,H,P,N) f32).
+    """
+    B, c, Q, H, P = xdt.shape
+    G, N = Bm.shape[3], Bm.shape[4]
+    grid = (B, c, H)
+
+    y, st = pl.pallas_call(
+        _ssd_kernel,
+        grid=grid,
+        in_specs=[
+            # C/B indexed by the head's group
+            pl.BlockSpec((1, 1, Q, 1, N),
+                         lambda b, ci, h, R=H // G: (b, ci, 0, h // R, 0)),
+            pl.BlockSpec((1, 1, Q, 1, N),
+                         lambda b, ci, h, R=H // G: (b, ci, 0, h // R, 0)),
+            pl.BlockSpec((1, 1, Q, 1, P), lambda b, ci, h: (b, ci, 0, h, 0)),
+            pl.BlockSpec((1, 1, Q, 1), lambda b, ci, h: (b, ci, 0, h)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, Q, 1, P), lambda b, ci, h: (b, ci, 0, h, 0)),
+            pl.BlockSpec((1, 1, 1, P, N), lambda b, ci, h: (b, ci, h, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, c, Q, H, P), jnp.float32),
+            jax.ShapeDtypeStruct((B, c, H, P, N), jnp.float32),
+        ],
+        interpret=interpret,
+    )(Cm, Bm, xdt, cs)
+    return y, st

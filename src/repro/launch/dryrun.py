@@ -1,0 +1,145 @@
+import os
+
+os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=512 "
+                           + os.environ.get("XLA_FLAGS", ""))
+
+"""Multi-pod dry-run: AOT lower + compile every (arch x shape x mesh).
+
+The two lines above MUST run before any jax import (jax locks the device
+count at first init) — which is why this module sets XLA_FLAGS at the very
+top and why nothing else in the package does.
+
+For each combination this driver:
+  1. builds the production mesh (16x16 single-pod / 2x16x16 multi-pod),
+  2. assembles the step bundle (ShapeDtypeStruct inputs + rule-engine
+     shardings — zero device allocation),
+  3. ``jax.jit(step).lower(...).compile()``,
+  4. records ``memory_analysis()`` (proves it fits), ``cost_analysis()``
+     (FLOPs/bytes for §Roofline) and the per-collective byte counts parsed
+     from the optimized HLO,
+  5. writes a JSON record under experiments/dryrun/ that the roofline
+     benchmark (§Roofline) and EXPERIMENTS.md tables read.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-14b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both
+"""
+
+import argparse
+import json
+import time
+import traceback
+
+
+def _run_one(arch: str, shape_name: str, multi_pod: bool, out_dir: str,
+             verbose: bool = True) -> dict:
+    import jax
+    from repro.configs import get_config, get_shape
+    from repro.launch.mesh import make_production_mesh
+    from repro.launch.steps import build_step, lower_step
+    from repro.roofline.analysis import (collective_bytes_from_hlo,
+                                         extract_cost, roofline_report)
+
+    cfg = get_config(arch)
+    shape = get_shape(shape_name)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    rec = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+           "num_devices": mesh.size, "status": "ok"}
+    t0 = time.time()
+    try:
+        bundle = build_step(cfg, shape, mesh)
+        lowered = lower_step(bundle, mesh)
+        rec["lower_seconds"] = round(time.time() - t0, 1)
+        t1 = time.time()
+        compiled = lowered.compile()
+        rec["compile_seconds"] = round(time.time() - t1, 1)
+
+        mem = compiled.memory_analysis()
+        rec["memory"] = {
+            "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+            "output_bytes": getattr(mem, "output_size_in_bytes", None),
+            "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+            "peak_bytes": (getattr(mem, "argument_size_in_bytes", 0) or 0)
+            + (getattr(mem, "temp_size_in_bytes", 0) or 0),
+        }
+        rec["cost"] = extract_cost(compiled)
+        hlo = compiled.as_text()
+        rec["collectives"] = collective_bytes_from_hlo(hlo)
+        # HLO-derived terms (CAVEAT: XLA counts scan bodies once — these
+        # under-report for scanned layers; kept as secondary evidence).
+        rec["roofline_hlo"] = roofline_report(cfg, shape, mesh, rec)
+        # Primary analytic roofline (EXPERIMENTS.md §Roofline/methodology).
+        import numpy as _np
+        from repro.launch.steps import num_microbatches
+        from repro.models.sharding import data_axes
+        from repro.roofline.calculator import roofline_terms
+        dp = int(_np.prod([mesh.shape[a] for a in data_axes(mesh)]))
+        rec["roofline"] = roofline_terms(
+            cfg, shape, mesh, num_microbatches(cfg, shape, dp))
+        if verbose:
+            m = rec["memory"]
+            r = rec["roofline"]
+            print(f"[ok] {arch} x {shape_name} x {mesh_name}: "
+                  f"args {m['argument_bytes']/2**30:.2f} GiB/dev, "
+                  f"temp {(m['temp_bytes'] or 0)/2**30:.2f} GiB/dev | "
+                  f"compute {r['compute_s']*1e3:.2f} ms, "
+                  f"memory {r['memory_s']*1e3:.2f} ms, "
+                  f"collective {r['collective_s']*1e3:.2f} ms "
+                  f"-> {r['bottleneck']}-bound "
+                  f"(lower {rec['lower_seconds']}s, "
+                  f"compile {rec['compile_seconds']}s)")
+    except Exception as e:  # noqa: BLE001 — record and continue
+        rec["status"] = "error"
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()
+        if verbose:
+            print(f"[FAIL] {arch} x {shape_name} x {mesh_name}: {rec['error']}")
+
+    os.makedirs(out_dir, exist_ok=True)
+    fname = f"{arch}__{shape_name}__{mesh_name}.json"
+    with open(os.path.join(out_dir, fname), "w") as f:
+        slim = {k: v for k, v in rec.items() if k != "traceback"}
+        json.dump(slim, f, indent=2, default=str)
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", choices=["single", "multi", "both"],
+                    default="single")
+    ap.add_argument("--all", action="store_true",
+                    help="run every (arch x shape) combination")
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--skip-existing", action="store_true")
+    args = ap.parse_args()
+
+    from repro.configs import SHAPES, list_archs
+
+    archs = list_archs() if (args.all or args.arch is None) else [args.arch]
+    shapes = list(SHAPES) if (args.all or args.shape is None) else [args.shape]
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+
+    failures = 0
+    for arch in archs:
+        for shape in shapes:
+            for multi in meshes:
+                mesh_name = "2x16x16" if multi else "16x16"
+                path = os.path.join(args.out,
+                                    f"{arch}__{shape}__{mesh_name}.json")
+                if args.skip_existing and os.path.exists(path):
+                    with open(path) as f:
+                        if json.load(f).get("status") == "ok":
+                            print(f"[skip] {arch} x {shape} x {mesh_name}")
+                            continue
+                rec = _run_one(arch, shape, multi, args.out)
+                failures += rec["status"] != "ok"
+    print(f"\ndry-run complete; {failures} failure(s)")
+    raise SystemExit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,338 @@
+"""Step builders + input specs for every (arch × workload shape).
+
+``build_step(cfg, shape, mesh)`` returns everything the dry-run, trainer
+and server need: the step function, ShapeDtypeStruct stand-ins for every
+input (weak-type-correct, shardable, zero allocation), and the
+in/out shardings assembled from the rule engine.
+
+Workload -> step mapping:
+  train_4k                -> train_step   (grad-accum microbatches + AdamW)
+  prefill_32k             -> prefill_step (forward + KV-cache fill)
+  decode_32k / long_500k  -> serve_step   (ONE token against a seq_len cache)
+
+long_500k on pure-attention archs uses the sliding-window variant
+(cfg.long_context_window) — the sub-quadratic requirement; SSM/hybrid
+archs carry O(1)/O(S_attn) state natively (DESIGN.md §6).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models import encdec as ED
+from repro.models import transformer as T
+from repro.models.sharding import (batch_pspec, data_axes, params_pspecs,
+                                   use_mesh)
+from repro.optim import adamw, clip_by_global_norm, linear_warmup_cosine
+
+# ---------------------------------------------------------------------------
+# Microbatch policy (activation-memory control; see EXPERIMENTS.md §Dry-run)
+# ---------------------------------------------------------------------------
+
+# tuned in §Perf iteration H4 so every train combo fits 16 GiB/device
+# (see EXPERIMENTS.md §Perf for the before/after peak-bytes table).
+_MICROBATCHES = {
+    ("deepseek-v3-671b", "train_4k"): 32,
+    ("jamba-v0.1-52b", "train_4k"): 16,
+    ("llama4-scout-17b-a16e", "train_4k"): 16,
+    ("internvl2-26b", "train_4k"): 8,
+    ("qwen3-14b", "train_4k"): 8,
+    ("qwen2-7b", "train_4k"): 4,
+    ("moonshot-v1-16b-a3b", "train_4k"): 16,
+    ("mamba2-2.7b", "train_4k"): 8,
+    ("gemma-2b", "train_4k"): 2,
+    ("seamless-m4t-medium", "train_4k"): 2,
+}
+
+
+def num_microbatches(cfg: ModelConfig, shape: ShapeConfig,
+                     dp: int = 1) -> int:
+    """Gradient-accumulation factor, clamped so each microbatch still
+    shards evenly over the ``dp`` data-parallel ways (a fractional
+    per-shard batch forces GSPMD into full rematerialization — observed
+    as 'Involuntary full rematerialization' warnings in §Perf H4)."""
+    if shape.kind != "train":
+        return 1
+    g = _MICROBATCHES.get((cfg.name, shape.name), shape.num_microbatches)
+    g = max(1, min(g, shape.global_batch // max(dp, 1) or 1))
+    while shape.global_batch % (g * max(dp, 1)):
+        g -= 1
+    return max(g, 1)
+
+
+def decode_window(cfg: ModelConfig, shape: ShapeConfig) -> Optional[int]:
+    """Sliding window for long-context decode on pure-attention archs."""
+    if shape.name == "long_500k" and cfg.arch_type in ("dense", "moe", "vlm"):
+        return cfg.long_context_window
+    return None
+
+
+# ---------------------------------------------------------------------------
+# Input ShapeDtypeStructs
+# ---------------------------------------------------------------------------
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, jnp.dtype(dtype))
+
+
+def batch_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    """ShapeDtypeStructs for one global batch of this workload."""
+    B, S = shape.global_batch, shape.seq_len
+    cdt = cfg.compute_dtype
+    if cfg.is_encoder_decoder:
+        return {"src_embeds": _sds((B, S, cfg.d_model), cdt),
+                "tokens": _sds((B, S), jnp.int32),
+                "labels": _sds((B, S), jnp.int32)}
+    out = {}
+    n_text = S - cfg.num_prefix_embeds
+    out["tokens"] = _sds((B, n_text), jnp.int32)
+    out["labels"] = _sds((B, n_text), jnp.int32)
+    if cfg.num_prefix_embeds:
+        out["prefix_embeds"] = _sds((B, cfg.num_prefix_embeds, cfg.d_model),
+                                    cdt)
+    return out
+
+
+def params_specs(cfg: ModelConfig):
+    init = ED.init_encdec if cfg.is_encoder_decoder else T.init_lm
+    return jax.eval_shape(lambda: init(jax.random.PRNGKey(0), cfg))
+
+
+def cache_specs(cfg: ModelConfig, batch: int, max_seq: int):
+    if cfg.is_encoder_decoder:
+        return jax.eval_shape(
+            lambda: ED.init_encdec_cache(cfg, batch, max_seq))
+    return jax.eval_shape(lambda: T.init_lm_cache(cfg, batch, max_seq))
+
+
+# ---------------------------------------------------------------------------
+# Cache sharding rules (DESIGN.md §4)
+# ---------------------------------------------------------------------------
+
+
+def cache_pspecs(cache, mesh: Mesh, batch: int):
+    """Leaves are stacked (layers, B, ...).  batch -> (pod,data) when it
+    divides; the cache *sequence* dim -> 'model' (flash-decode style
+    partial-softmax sharding); SSM state heads / conv channels -> 'model'."""
+    daxes = data_axes(mesh)
+    dsize = int(np.prod([mesh.shape[a] for a in daxes]))
+    msize = mesh.shape.get("model", 1)
+
+    def spec_for(path, leaf):
+        name = path.split("/")[-1]
+        nd = leaf.ndim
+        spec = [None] * nd
+        batch_ok = batch % dsize == 0
+        if batch_ok:
+            spec[1] = daxes
+        if name in ("k", "v", "ckv", "krope"):
+            seq = leaf.shape[2]
+            if batch_ok:
+                if seq % msize == 0:
+                    spec[2] = "model"
+            else:
+                # batch=1 long-context: shard seq over every axis it divides
+                full = (*daxes, "model")
+                if seq % int(np.prod([mesh.shape[a] for a in full])) == 0:
+                    spec[2] = full
+                elif "data" in mesh.axis_names and seq % mesh.shape["data"] == 0:
+                    spec[2] = "data"
+            if (name in ("k", "v") and spec[2] is None
+                    and leaf.shape[3] % msize == 0):
+                spec[3] = "model"
+        elif name == "ssm":
+            if leaf.shape[2] % msize == 0:
+                spec[2] = "model"
+        elif name == "conv":
+            if leaf.shape[3] % msize == 0:
+                spec[3] = "model"
+        return P(*spec)
+
+    def walk(node, path):
+        if isinstance(node, dict):
+            return {k: walk(v, f"{path}/{k}") for k, v in node.items()}
+        if isinstance(node, (list, tuple)):
+            return type(node)(walk(v, f"{path}/{i}")
+                              for i, v in enumerate(node))
+        return spec_for(path, node)
+
+    return walk(cache, "")
+
+
+def _named(mesh, pspec_tree):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), pspec_tree,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def batch_shardings(cfg, shape, mesh):
+    specs = batch_specs(cfg, shape)
+    return {k: NamedSharding(mesh, batch_pspec(mesh, v.ndim, 0,
+                                               shape.global_batch))
+            for k, v in specs.items()}
+
+
+# ---------------------------------------------------------------------------
+# Step functions
+# ---------------------------------------------------------------------------
+
+
+def make_optimizer(cfg: ModelConfig, total_steps: int = 10_000,
+                   state_dtype: Optional[str] = None):
+    # bf16 moments for the very large configs (fits one pod; DESIGN.md §4)
+    if state_dtype is None:
+        state_dtype = "bfloat16" if cfg.param_count() > 5e10 else "float32"
+    return adamw(linear_warmup_cosine(3e-4, 200, total_steps),
+                 state_dtype=state_dtype)
+
+
+def make_train_step(cfg: ModelConfig, shape: ShapeConfig, opt,
+                    dp: int = 1) -> Callable:
+    G = num_microbatches(cfg, shape, dp)
+    loss_fn = (ED.encdec_train_loss if cfg.is_encoder_decoder
+               else T.lm_train_loss)
+
+    def train_step(params, opt_state, step, batch):
+        def grad_fn(mb):
+            return jax.value_and_grad(
+                lambda p: loss_fn(p, cfg, mb), has_aux=True)(params)
+
+        # H8: very large models accumulate grads in bf16 (Switch-style) —
+        # the f32 accumulator for 656B expert params alone was 10 GiB/dev.
+        acc_dtype = (jnp.bfloat16 if cfg.param_count() > 5e10
+                     else jnp.float32)
+        if G == 1:
+            (loss, metrics), grads = grad_fn(batch)
+            grads = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+        else:
+            mbs = jax.tree.map(
+                lambda x: x.reshape(G, x.shape[0] // G, *x.shape[1:]), batch)
+            acc0 = jax.tree.map(lambda p: jnp.zeros(p.shape, acc_dtype),
+                                params)
+
+            def body(acc, mb):
+                (loss, metrics), grads = grad_fn(mb)
+                acc = jax.tree.map(
+                    lambda a, g: a + (g.astype(jnp.float32) / G
+                                      ).astype(a.dtype), acc, grads)
+                return acc, metrics
+
+            grads, ms = jax.lax.scan(body, acc0, mbs)
+            metrics = jax.tree.map(jnp.mean, ms)
+
+        grads, gnorm = clip_by_global_norm(grads, 1.0)
+        params, opt_state = opt.update(grads, opt_state, params, step)
+        metrics = dict(metrics, grad_norm=gnorm)
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def make_prefill_step(cfg: ModelConfig, shape: ShapeConfig) -> Callable:
+    def prefill_step(params, batch):
+        if cfg.is_encoder_decoder:
+            caches = ED.init_encdec_cache(cfg, shape.global_batch,
+                                          shape.seq_len)
+            return ED.encdec_prefill(params, cfg, batch, caches)
+        caches = T.init_lm_cache(cfg, shape.global_batch, shape.seq_len)
+        return T.lm_prefill(params, cfg, batch, caches)
+
+    return prefill_step
+
+
+def make_decode_step(cfg: ModelConfig, shape: ShapeConfig) -> Callable:
+    window = decode_window(cfg, shape)
+
+    def serve_step(params, caches, token, pos):
+        if cfg.is_encoder_decoder:
+            return ED.encdec_decode_step(params, cfg, token, caches, pos,
+                                         window=window)
+        return T.lm_decode_step(params, cfg, token, caches, pos,
+                                window=window)
+
+    return serve_step
+
+
+# ---------------------------------------------------------------------------
+# Bundles for the dry-run / launchers
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class StepBundle:
+    fn: Callable
+    args: Tuple[Any, ...]
+    in_shardings: Tuple[Any, ...]
+    out_shardings: Any
+    donate_argnums: Tuple[int, ...] = ()
+    static_names: Tuple[str, ...] = ()
+
+
+def build_step(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh,
+               total_steps: int = 10_000) -> StepBundle:
+    p_specs = params_specs(cfg)
+    p_shard = _named(mesh, params_pspecs(p_specs, mesh))
+    repl = NamedSharding(mesh, P())
+
+    if shape.kind == "train":
+        opt = make_optimizer(cfg, total_steps)
+        opt_specs = jax.eval_shape(opt.init, p_specs)
+        opt_shard = _named(mesh, params_pspecs(opt_specs, mesh))
+        b_specs = batch_specs(cfg, shape)
+        b_shard = batch_shardings(cfg, shape, mesh)
+        dp = int(np.prod([mesh.shape[a] for a in data_axes(mesh)]))
+        fn = make_train_step(cfg, shape, opt, dp)
+        args = (p_specs, opt_specs, _sds((), jnp.int32), b_specs)
+        in_sh = (p_shard, opt_shard, repl, b_shard)
+        out_sh = (p_shard, opt_shard, None)
+        # H10 (REFUTED on the CPU dry-run backend, see EXPERIMENTS.md §Perf):
+        # donating params+opt is correct on TPU, but XLA:CPU's buffer
+        # assignment regressed temp 24->40 GiB with aliasing enabled, so
+        # the dry-run measures without donation.  Flip on real hardware:
+        return StepBundle(fn, args, in_sh, out_sh, donate_argnums=())
+
+    if shape.kind == "prefill":
+        b_specs = batch_specs(cfg, shape)
+        b_specs.pop("labels", None)
+        b_shard = batch_shardings(cfg, shape, mesh)
+        b_shard.pop("labels", None)
+        c_specs = cache_specs(cfg, shape.global_batch, shape.seq_len)
+        c_shard = _named(mesh, cache_pspecs(c_specs, mesh,
+                                            shape.global_batch))
+        fn = make_prefill_step(cfg, shape)
+        args = (p_specs, b_specs)
+        in_sh = (p_shard, b_shard)
+        out_sh = (None, c_shard)
+        return StepBundle(fn, args, in_sh, out_sh)
+
+    # decode
+    c_specs = cache_specs(cfg, shape.global_batch, shape.seq_len)
+    c_shard = _named(mesh, cache_pspecs(c_specs, mesh, shape.global_batch))
+    tok = _sds((shape.global_batch, 1), jnp.int32)
+    tok_shard = NamedSharding(mesh, batch_pspec(mesh, 2, 0,
+                                                shape.global_batch))
+    fn = make_decode_step(cfg, shape)
+    args = (p_specs, c_specs, tok, _sds((), jnp.int32))
+    in_sh = (p_shard, c_shard, tok_shard, repl)
+    out_sh = (None, c_shard)
+    # H10 (REFUTED on CPU backend — see train bundle note): cache donation
+    # is the production setting on TPU; measured OFF here.
+    return StepBundle(fn, args, in_sh, out_sh, donate_argnums=())
+
+
+def lower_step(bundle: StepBundle, mesh: Mesh):
+    """AOT-lower the bundle on ``mesh`` (no allocation)."""
+    with use_mesh(mesh):
+        jitted = jax.jit(bundle.fn, in_shardings=bundle.in_shardings,
+                         out_shardings=bundle.out_shardings,
+                         donate_argnums=bundle.donate_argnums)
+        lowered = jitted.lower(*bundle.args)
+    return lowered

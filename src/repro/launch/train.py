@@ -1,0 +1,132 @@
+"""Training launcher: distributed LM training or federated (FL) training.
+
+Standard mode runs the data-parallel/tensor-parallel training loop over the
+synthetic token pipeline with checkpointing.  ``--fl`` runs the paper's
+federated workflow: DQRE-SCnet (or a baseline policy) selects the cohort
+every communication round (examples/fl_mnist.py is the scripted variant).
+
+Examples:
+  PYTHONPATH=src python -m repro.launch.train --arch gemma-2b --steps 20 \
+      --reduced --global-batch 8 --seq-len 128
+  PYTHONPATH=src python -m repro.launch.train --fl --dataset mnist \
+      --policy dqre_sc --rounds 30
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import time
+
+
+def train_lm(args) -> None:
+    import jax
+    import numpy as np
+    from repro.checkpoint import Checkpointer
+    from repro.configs import get_config
+    from repro.configs.base import ShapeConfig
+    from repro.data import TokenDataConfig, make_batch_iterator
+    from repro.launch.mesh import make_test_mesh
+    from repro.launch.steps import (build_step, lower_step, make_optimizer,
+                                    make_train_step)
+    from repro.models import transformer as T
+    from repro.models import encdec as ED
+    from repro.models.sharding import use_mesh
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    shape = ShapeConfig("custom_train", args.seq_len, args.global_batch,
+                        "train", args.microbatches)
+
+    n_dev = len(jax.devices())
+    mesh = make_test_mesh(data=n_dev, model=1)
+    opt = make_optimizer(cfg, args.steps)
+    step_fn = make_train_step(cfg, shape, opt)
+
+    key = jax.random.PRNGKey(args.seed)
+    init = ED.init_encdec if cfg.is_encoder_decoder else T.init_lm
+    with use_mesh(mesh):
+        params = init(key, cfg)
+        opt_state = opt.init(params)
+    n_params = sum(int(np.prod(x.shape)) for x in jax.tree.leaves(params))
+    print(f"arch={cfg.name} params={n_params/1e6:.1f}M devices={n_dev}")
+
+    data_cfg = TokenDataConfig(cfg.vocab_size, args.seq_len,
+                               args.global_batch, seed=args.seed)
+    it = make_batch_iterator(data_cfg, mesh, num_batches=args.steps)
+    ckpt = Checkpointer(args.ckpt_dir) if args.ckpt_dir else None
+
+    jitted = jax.jit(step_fn)
+    t0 = time.time()
+    for step, batch in enumerate(it):
+        if cfg.is_encoder_decoder:
+            bsz = batch["tokens"].shape[0]
+            batch = dict(batch, src_embeds=jax.numpy.zeros(
+                (bsz, args.seq_len, cfg.d_model), cfg.compute_dtype))
+        params, opt_state, metrics = jitted(
+            params, opt_state, jax.numpy.int32(step), batch)
+        if step % args.log_every == 0:
+            loss = float(metrics["loss"])
+            dt = time.time() - t0
+            tok_s = args.global_batch * args.seq_len * (step + 1) / dt
+            print(f"step {step:5d}  loss {loss:.4f}  {tok_s:,.0f} tok/s")
+        if ckpt and step and step % args.ckpt_every == 0:
+            ckpt.save(step, {"params": params, "opt_state": opt_state},
+                      {"loss": float(metrics['loss'])})
+    print(f"done in {time.time()-t0:.1f}s; final loss "
+          f"{float(metrics['loss']):.4f}")
+    if ckpt:
+        ckpt.save(args.steps, {"params": params, "opt_state": opt_state})
+
+
+def train_fl(args) -> None:
+    from repro.fed import FederatedRunner, RunnerConfig
+
+    cfg = RunnerConfig(dataset=args.dataset, policy=args.policy,
+                       sigma=args.sigma, num_clients=args.num_clients,
+                       clients_per_round=args.clients_per_round,
+                       target_accuracy=args.target_accuracy, seed=args.seed)
+    runner = FederatedRunner(cfg)
+    print(f"FL: {args.dataset} sigma={args.sigma} policy={args.policy} "
+          f"clients={args.num_clients} cohort={args.clients_per_round}")
+    for _ in range(args.rounds):
+        res = runner.run_round()
+        print(f"round {res.round_idx:4d}  acc {res.accuracy:.4f}  "
+              f"reward {res.reward:+.3f}  ({res.seconds:.1f}s)")
+        if res.accuracy >= args.target_accuracy:
+            print(f"target {args.target_accuracy} reached at round "
+                  f"{res.round_idx + 1}")
+            break
+    print("final metrics:", runner.final_metrics())
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--fl", action="store_true")
+    # LM mode
+    ap.add_argument("--arch", default="gemma-2b")
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--global-batch", type=int, default=8)
+    ap.add_argument("--seq-len", type=int, default=256)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--log-every", type=int, default=10)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    # FL mode
+    ap.add_argument("--dataset", default="mnist")
+    ap.add_argument("--policy", default="dqre_sc",
+                    choices=["fedavg", "kcenter", "favor", "dqre_sc"])
+    ap.add_argument("--sigma", type=float, default=0.5)
+    ap.add_argument("--rounds", type=int, default=50)
+    ap.add_argument("--num-clients", type=int, default=100)
+    ap.add_argument("--clients-per-round", type=int, default=10)
+    ap.add_argument("--target-accuracy", type=float, default=0.85)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+    (train_fl if args.fl else train_lm)(args)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,277 @@
+"""Grouped-query attention with KV-cache decode, qk-norm, sliding window.
+
+Covers every attention variant in the assigned pool except DeepSeek MLA
+(see ``mla.py``): GQA (Llama/Qwen/Jamba), MQA (Gemma-2B kv=1), qk-norm
+(Qwen3), QKV bias (Qwen2), sliding-window masking (used for the long_500k
+decode shape on full-attention archs), and bidirectional/cross attention
+for the encoder-decoder (Seamless) family.
+
+Modes
+-----
+* full   : (B, S, d) -> (B, S, d), causal (or bidirectional) mask.
+* decode : (B, 1, d) + cache {k,v: (B, S_max, K, hd)} -> one-step output
+           and the updated cache.  ``cache_pos`` is the write position.
+
+The pure-jnp path below is the oracle; ``kernels/flash_attention_pallas.py``
+provides the TPU Pallas kernel validated against it (flip with
+``use_pallas``).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import layers as L
+from repro.models.sharding import constrain
+
+NEG_INF = -1e30
+
+
+def attn_init(key, cfg, *, cross: bool = False):
+    keys = jax.random.split(key, 6)
+    dt = cfg.param_dtype
+    d = cfg.d_model
+    p = {
+        "wq": L.dense_init(keys[0], d, cfg.q_dim, bias=cfg.qkv_bias, dtype=dt),
+        "wk": L.dense_init(keys[1], d, cfg.kv_dim, bias=cfg.qkv_bias, dtype=dt),
+        "wv": L.dense_init(keys[2], d, cfg.kv_dim, bias=cfg.qkv_bias, dtype=dt),
+        "wo": L.dense_init(keys[3], cfg.q_dim, d, dtype=dt),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = L.rmsnorm_init(cfg.head_dim, dtype=dt)
+        p["k_norm"] = L.rmsnorm_init(cfg.head_dim, dtype=dt)
+    del cross  # same parameter shapes; kept for call-site clarity
+    return p
+
+
+def init_kv_cache(cfg, batch: int, max_seq: int, dtype=None):
+    dtype = dtype or jnp.dtype(cfg.compute_dtype)
+    shape = (batch, max_seq, cfg.num_kv_heads, cfg.head_dim)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
+def _split_heads(x, n, hd):
+    return x.reshape(*x.shape[:-1], n, hd)
+
+
+def _qk_normalize(p, q, k, eps):
+    if "q_norm" in p:
+        q = L.rmsnorm(p["q_norm"], q, eps)
+        k = L.rmsnorm(p["k_norm"], k, eps)
+    return q, k
+
+
+def _gqa_scores(q, k):
+    """(B,S,H,hd) x (B,T,K,hd) -> (B,K,H/K,S,T) grouped scores."""
+    B, S, H, hd = q.shape
+    K = k.shape[2]
+    q = q.reshape(B, S, K, H // K, hd)
+    return jnp.einsum("bskgd,btkd->bkgst", q, k,
+                      preferred_element_type=jnp.float32)
+
+
+def _gqa_out(w, v):
+    """(B,K,H/K,S,T) x (B,T,K,hd) -> (B,S,H,hd)."""
+    B, K, G, S, T = w.shape
+    out = jnp.einsum("bkgst,btkd->bskgd", w.astype(v.dtype), v)
+    return out.reshape(B, S, K * G, v.shape[-1])
+
+
+def make_mask(q_positions, k_positions, *, causal: bool, window=None,
+              k_valid_len=None):
+    """Boolean mask (broadcastable to (..., S_q, S_k)); True = attend."""
+    qp = q_positions[..., :, None]
+    kp = k_positions[..., None, :]
+    mask = jnp.ones(jnp.broadcast_shapes(qp.shape, kp.shape), bool)
+    if causal:
+        mask &= kp <= qp
+    if window is not None:
+        mask &= kp > qp - window
+    if k_valid_len is not None:
+        mask &= kp < k_valid_len
+    return mask
+
+
+def blocked_attention(q, k, v, *, causal=True, window=None, softcap=None,
+                      q_positions=None, k_positions=None, k_valid_len=None,
+                      scale=None, q_chunk=256, kv_chunk=512):
+    """Flash-style online-softmax attention in pure jnp.
+
+    Memory per step is O(q_chunk * kv_chunk) instead of O(S_q * S_k), which
+    is what lets the 32k-prefill shapes lower with bounded activations.  The
+    Pallas TPU kernel (`kernels/flash_attention_pallas.py`) implements the
+    same schedule with VMEM BlockSpecs; this function is its jnp twin and
+    the production fallback path.
+
+    q: (B, Sq, H, d); k/v: (B, T, K, dv) with H = K * G (GQA).
+    Returns (B, Sq, H, dv).
+    """
+    B, Sq, H, dh = q.shape
+    T, K = k.shape[1], k.shape[2]
+    G = H // K
+    dv = v.shape[-1]
+    scale = scale if scale is not None else 1.0 / np.sqrt(dh)
+    if q_positions is None:
+        q_positions = jnp.arange(Sq)
+    if k_positions is None:
+        k_positions = jnp.arange(T)
+
+    q_chunk = min(q_chunk, Sq)
+    kv_chunk = min(kv_chunk, T)
+    pq = (-Sq) % q_chunk
+    pk = (-T) % kv_chunk
+    qp = jnp.pad(q_positions, (0, pq), constant_values=-1)
+    kp = jnp.pad(k_positions, (0, pk), constant_values=2**30)
+    qq = jnp.pad(q, ((0, 0), (0, pq), (0, 0), (0, 0)))
+    kk = jnp.pad(k, ((0, 0), (0, pk), (0, 0), (0, 0)))
+    vv = jnp.pad(v, ((0, 0), (0, pk), (0, 0), (0, 0)))
+    nq, nk = (Sq + pq) // q_chunk, (T + pk) // kv_chunk
+
+    # keep the staged tensors in their input dtype (bf16 in production) —
+    # per-chunk math below upcasts to f32.  Staging everything in f32 was
+    # §Perf iteration H1's before-state: it doubled peak prefill bytes.
+    qq = qq.reshape(B, nq, q_chunk, K, G, dh)
+    kk = kk.reshape(B, nk, kv_chunk, K, dh)
+    vv = vv.reshape(B, nk, kv_chunk, K, dv)
+    qp = qp.reshape(nq, q_chunk)
+    kp = kp.reshape(nk, kv_chunk)
+    valid_len = k_valid_len if k_valid_len is not None else T
+
+    def q_step(_, q_in):
+        qi, qpos = q_in                                    # (B,Qc,K,G,dh),(Qc,)
+
+        def kv_step(carry, kv_in):
+            m, l, acc = carry
+            kj, vj, kpos = kv_in
+            s = jnp.einsum("bqkgd,btkd->bkgqt", qi, kj,
+                           preferred_element_type=jnp.float32) * scale
+            if softcap:
+                s = jnp.tanh(s / softcap) * softcap
+            msk = (kpos[None, :] < valid_len)
+            if causal:
+                msk = msk & (kpos[None, :] <= qpos[:, None])
+            if window is not None:
+                msk = msk & (kpos[None, :] > qpos[:, None] - window)
+            s = jnp.where(msk[None, None, None], s, NEG_INF)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            p_ = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + jnp.sum(p_, axis=-1)
+            acc_new = acc * corr[..., None] + jnp.einsum(
+                "bkgqt,btkd->bkgqd", p_.astype(vj.dtype), vj,
+                preferred_element_type=jnp.float32)
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((B, K, G, q_chunk), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, K, G, q_chunk), jnp.float32)
+        a0 = jnp.zeros((B, K, G, q_chunk, dv), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(
+            kv_step, (m0, l0, a0),
+            (jnp.moveaxis(kk, 1, 0), jnp.moveaxis(vv, 1, 0), kp))
+        out = acc / jnp.maximum(l, 1e-30)[..., None]       # (B,K,G,Qc,dv)
+        return None, jnp.moveaxis(out, 3, 1)               # (B,Qc,K,G,dv)
+
+    _, outs = jax.lax.scan(q_step, None, (jnp.moveaxis(qq, 1, 0), qp))
+    out = jnp.moveaxis(outs, 0, 1).reshape(B, (Sq + pq), H, dv)
+    return out[:, :Sq].astype(v.dtype)
+
+
+# sequence length at/above which the full-attention einsum path switches to
+# the memory-bounded blocked path.
+BLOCKED_ATTN_THRESHOLD = 2048
+
+
+def attention(p, x, cfg, *, positions, causal=True, window=None,
+              memory=None, cross=False, cache=None, cache_pos=None):
+    """Unified attention entry point.
+
+    Args:
+      p: params from :func:`attn_init`.
+      x: (B, S, d) queries' residual stream.
+      positions: (S,) or (B, S) absolute positions for RoPE + masking.
+      causal / window: mask controls (ignored for cross attention).
+      memory: (B, T, d) cross-attention memory (encoder output).
+      cross: cross-attention flag; with ``cache`` set and no ``memory``,
+        K/V are read from the precomputed cross cache (decode path).
+      cache / cache_pos: KV cache; ``cache_pos`` is the write position.
+
+    Returns (out, new_cache) — new_cache is None unless a cache was given.
+    """
+    B, S, _ = x.shape
+    cross = cross or (memory is not None)
+    cdt = jnp.dtype(cfg.compute_dtype)
+    x = x.astype(cdt)
+
+    q = _split_heads(L.dense(p["wq"], x), cfg.num_heads, cfg.head_dim)
+    if cross and memory is None:
+        k = v = None                       # served from cross cache below
+    else:
+        kv_src = x if memory is None else memory.astype(cdt)
+        k = _split_heads(L.dense(p["wk"], kv_src), cfg.num_kv_heads,
+                         cfg.head_dim)
+        v = _split_heads(L.dense(p["wv"], kv_src), cfg.num_kv_heads,
+                         cfg.head_dim)
+    if k is not None:
+        q, k = _qk_normalize(p, q, k, cfg.norm_eps)
+    elif "q_norm" in p:
+        q = L.rmsnorm(p["q_norm"], q, cfg.norm_eps)
+
+    if not cross:
+        q = L.apply_rope(q, positions, cfg.rope_theta)
+        k = L.apply_rope(k, positions, cfg.rope_theta)
+
+    new_cache = None
+    if cache is not None and not cross:
+        # write this step's (or this prefill block's) k/v into the cache.
+        k_c = jax.lax.dynamic_update_slice_in_dim(
+            cache["k"], k.astype(cache["k"].dtype), cache_pos, axis=1)
+        v_c = jax.lax.dynamic_update_slice_in_dim(
+            cache["v"], v.astype(cache["v"].dtype), cache_pos, axis=1)
+        new_cache = {"k": k_c, "v": v_c}
+        k, v = k_c, v_c
+        k_positions = jnp.arange(k.shape[1])
+        causal = True
+        if window is not None and S == 1 and k.shape[1] > 2 * window:
+            # H3 (§Perf): windowed long-context decode reads only the live
+            # window of the cache instead of masking the full 500k entries
+            # — cuts executed attention FLOPs and cache HBM reads by
+            # seq_len/window (64x at long_500k).
+            start = jnp.clip(cache_pos - window + 1, 0,
+                             k.shape[1] - window)
+            k = jax.lax.dynamic_slice_in_dim(k, start, window, axis=1)
+            v = jax.lax.dynamic_slice_in_dim(v, start, window, axis=1)
+            k_positions = start + jnp.arange(window)
+    elif cache is not None:
+        # cross-attention against the precomputed memory cache.
+        k, v = cache["k"], cache["v"]
+        new_cache = cache
+        k_positions = jnp.arange(k.shape[1])
+        causal = False
+    else:
+        k_positions = positions if not cross else jnp.arange(k.shape[1])
+        if cross:
+            causal = False
+
+    q_pos1d = positions if positions.ndim == 1 else positions[0]
+    k_pos1d = k_positions if k_positions.ndim == 1 else k_positions[0]
+
+    if S >= BLOCKED_ATTN_THRESHOLD:
+        out = blocked_attention(
+            q, k, v, causal=causal, window=window,
+            softcap=cfg.logit_softcap, q_positions=q_pos1d,
+            k_positions=k_pos1d)
+    else:
+        mask = make_mask(q_pos1d[None], k_pos1d[None], causal=causal,
+                         window=window if causal else None)
+        scores = _gqa_scores(q, k) / np.sqrt(cfg.head_dim)
+        if cfg.logit_softcap:
+            cap = cfg.logit_softcap
+            scores = jnp.tanh(scores / cap) * cap
+        scores = jnp.where(mask[:, None, None, :, :], scores, NEG_INF)
+        w = jax.nn.softmax(scores, axis=-1)
+        out = _gqa_out(w, v)
+    out = constrain(out, ("pod", "data"), None, "model", None)
+    out = L.dense(p["wo"], out.reshape(B, S, cfg.q_dim))
+    return out, new_cache

@@ -1,0 +1,88 @@
+"""The paper's CNN classifier (DQRE §4.2, Fig. 4) in pure JAX.
+
+"the DQRE structure uses a torsion [conv] layer with windowing 3x3 with a
+descending rate of 24, 18, 12, and 6, and only one random pooling layer …
+The fully connected layer also has 1x1 windowing and rates 7 and 8."
+
+The paper under-specifies the topology (DESIGN.md §8.4); we implement the
+faithful reading: four 3x3 conv blocks with channel counts 24/18/12/6, one
+*stochastic* ("random") 2x2 pooling layer after the second conv, and two
+fully-connected layers.  This is the model trained by the federated clients
+in the MNIST / Fashion-MNIST / CIFAR-10 experiments.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _conv_init(key, h, w, cin, cout):
+    scale = 1.0 / np.sqrt(h * w * cin)
+    return {"w": jax.random.normal(key, (h, w, cin, cout), jnp.float32) * scale,
+            "b": jnp.zeros((cout,), jnp.float32)}
+
+
+def _conv(p, x, stride=1):
+    y = jax.lax.conv_general_dilated(
+        x, p["w"], window_strides=(stride, stride), padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    return y + p["b"]
+
+
+def stochastic_pool(x, rng=None):
+    """2x2 stochastic pooling (Zeiler & Fergus).  Train mode samples one
+    activation per window with probability proportional to its (relu'd)
+    magnitude; eval mode uses the probability-weighted average."""
+    B, H, W, C = x.shape
+    Hp, Wp = H // 2, W // 2
+    x = x[:, : Hp * 2, : Wp * 2]
+    win = x.reshape(B, Hp, 2, Wp, 2, C).transpose(0, 1, 3, 5, 2, 4)
+    win = win.reshape(B, Hp, Wp, C, 4)
+    pos = jnp.maximum(win, 0.0)
+    denom = jnp.sum(pos, axis=-1, keepdims=True)
+    probs = jnp.where(denom > 0, pos / jnp.maximum(denom, 1e-9), 0.25)
+    if rng is not None:
+        g = jax.random.gumbel(rng, win.shape)
+        idx = jnp.argmax(jnp.log(jnp.maximum(probs, 1e-9)) + g, axis=-1)
+        out = jnp.take_along_axis(win, idx[..., None], axis=-1)[..., 0]
+    else:
+        out = jnp.sum(probs * win, axis=-1)
+    return out
+
+
+def cnn_init(key, *, in_channels: int = 1, num_classes: int = 10,
+             image_size: int = 28):
+    keys = jax.random.split(key, 6)
+    chans = [in_channels, 24, 18, 12, 6]
+    params = {f"conv{i}": _conv_init(keys[i], 3, 3, chans[i], chans[i + 1])
+              for i in range(4)}
+    # after one 2x2 pool the spatial dims halve once
+    feat = (image_size // 2) ** 2 * chans[-1]
+    s1, s2 = 1.0 / np.sqrt(feat), 1.0 / np.sqrt(128)
+    params["fc1"] = {"w": jax.random.normal(keys[4], (feat, 128)) * s1,
+                     "b": jnp.zeros((128,))}
+    params["fc2"] = {"w": jax.random.normal(keys[5], (128, num_classes)) * s2,
+                     "b": jnp.zeros((num_classes,))}
+    return params
+
+
+def cnn_apply(params, x, *, rng=None):
+    """x: (B, H, W, C) float images -> (B, num_classes) logits."""
+    h = jax.nn.relu(_conv(params["conv0"], x))
+    h = jax.nn.relu(_conv(params["conv1"], h))
+    h = stochastic_pool(h, rng)
+    h = jax.nn.relu(_conv(params["conv2"], h))
+    h = jax.nn.relu(_conv(params["conv3"], h))
+    h = h.reshape(h.shape[0], -1)
+    h = jax.nn.relu(h @ params["fc1"]["w"] + params["fc1"]["b"])
+    return h @ params["fc2"]["w"] + params["fc2"]["b"]
+
+
+def cnn_loss(params, batch, rng=None):
+    logits = cnn_apply(params, batch["x"], rng=rng)
+    labels = batch["y"]
+    ce = -jnp.take_along_axis(jax.nn.log_softmax(logits), labels[:, None],
+                              axis=-1)[:, 0]
+    return jnp.mean(ce), logits

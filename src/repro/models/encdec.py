@@ -1,0 +1,192 @@
+"""Encoder–decoder transformer for the audio family (Seamless-M4T medium).
+
+Per the assignment carve-out the modality frontend (mel-spectrogram +
+conv feature extractor) is a stub: ``input_specs()`` supplies precomputed
+frame embeddings of shape (B, T_src, d_model).  This module implements the
+transformer backbone: a bidirectional encoder over frame embeddings and a
+causal text decoder with cross-attention, including cached decode.
+
+Cache layout for decode:
+  {"self":  per-layer stacked KV cache over target positions,
+   "cross": per-layer stacked K/V of the encoder memory (precomputed)}
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as A
+from repro.models import layers as L
+from repro.models.sharding import constrain_batch
+from repro.models.transformer import chunked_ce_loss, lm_logits
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+
+
+def _enc_block_init(key, cfg):
+    k1, k2 = jax.random.split(key)
+    return {
+        "attn_norm": L.rmsnorm_init(cfg.d_model, dtype=cfg.param_dtype),
+        "attn": A.attn_init(k1, cfg),
+        "ffn_norm": L.rmsnorm_init(cfg.d_model, dtype=cfg.param_dtype),
+        "ffn": L.mlp_init(k2, cfg.d_model, cfg.d_ff, act=cfg.mlp_act,
+                          dtype=cfg.param_dtype),
+    }
+
+
+def _dec_block_init(key, cfg):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "self_norm": L.rmsnorm_init(cfg.d_model, dtype=cfg.param_dtype),
+        "self_attn": A.attn_init(k1, cfg),
+        "cross_norm": L.rmsnorm_init(cfg.d_model, dtype=cfg.param_dtype),
+        "cross_attn": A.attn_init(k2, cfg, cross=True),
+        "ffn_norm": L.rmsnorm_init(cfg.d_model, dtype=cfg.param_dtype),
+        "ffn": L.mlp_init(k3, cfg.d_model, cfg.d_ff, act=cfg.mlp_act,
+                          dtype=cfg.param_dtype),
+    }
+
+
+def init_encdec(key, cfg):
+    ke, kd, kt, kh = jax.random.split(key, 4)
+    enc_keys = jax.random.split(ke, cfg.num_encoder_layers)
+    dec_keys = jax.random.split(kd, cfg.num_layers)
+    params = {
+        "encoder": {
+            "blocks": jax.vmap(lambda k: _enc_block_init(k, cfg))(enc_keys),
+            "norm": L.rmsnorm_init(cfg.d_model, dtype=cfg.param_dtype),
+        },
+        "decoder": {
+            "blocks": jax.vmap(lambda k: _dec_block_init(k, cfg))(dec_keys),
+            "norm": L.rmsnorm_init(cfg.d_model, dtype=cfg.param_dtype),
+        },
+        "embed": L.embed_init(kt, cfg.vocab_size, cfg.d_model,
+                              dtype=cfg.param_dtype),
+        "final_norm": L.rmsnorm_init(cfg.d_model, dtype=cfg.param_dtype),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = L.dense_init(kh, cfg.d_model, cfg.vocab_size,
+                                         dtype=cfg.param_dtype)
+    return params
+
+
+def init_encdec_cache(cfg, batch: int, max_seq: int, dtype=None):
+    nl = cfg.num_layers
+    self_one = A.init_kv_cache(cfg, batch, max_seq, dtype)
+    cross_one = A.init_kv_cache(cfg, batch, cfg.encoder_seq_len, dtype)
+    stack = lambda c: jax.tree.map(
+        lambda x: jnp.broadcast_to(x, (nl, *x.shape)), c)
+    return {"self": stack(self_one), "cross": stack(cross_one)}
+
+
+# ---------------------------------------------------------------------------
+# Forward
+# ---------------------------------------------------------------------------
+
+
+def encode(params, cfg, src_embeds, *, remat=False):
+    """Bidirectional encoder over stub frame embeddings (B, T, d)."""
+    h = constrain_batch(src_embeds.astype(jnp.dtype(cfg.compute_dtype)))
+    positions = jnp.arange(h.shape[1])
+
+    def body(h, blk):
+        hn = L.rmsnorm(blk["attn_norm"], h, cfg.norm_eps)
+        out, _ = A.attention(blk["attn"], hn, cfg, positions=positions,
+                             causal=False)
+        h = h + out.astype(h.dtype)
+        hn = L.rmsnorm(blk["ffn_norm"], h, cfg.norm_eps)
+        h = h + L.mlp(blk["ffn"], hn, act=cfg.mlp_act).astype(h.dtype)
+        return h, None
+
+    if remat:
+        body = jax.checkpoint(body,
+                              policy=jax.checkpoint_policies.nothing_saveable)
+    h, _ = jax.lax.scan(body, h, params["encoder"]["blocks"])
+    return L.rmsnorm(params["encoder"]["norm"], h, cfg.norm_eps)
+
+
+def _decoder(params, cfg, h, memory, *, positions, caches=None,
+             cache_pos=None, window=None, remat=False):
+    """Decoder stack.  ``memory`` may be None when cross caches are given."""
+
+    def body(h, xs):
+        blk, self_c, cross_c = xs
+        hn = L.rmsnorm(blk["self_norm"], h, cfg.norm_eps)
+        out, new_self = A.attention(blk["self_attn"], hn, cfg,
+                                    positions=positions, window=window,
+                                    cache=self_c, cache_pos=cache_pos)
+        h = h + out.astype(h.dtype)
+        hn = L.rmsnorm(blk["cross_norm"], h, cfg.norm_eps)
+        out, new_cross = A.attention(blk["cross_attn"], hn, cfg,
+                                     positions=positions, memory=memory,
+                                     cross=True, cache=cross_c)
+        h = h + out.astype(h.dtype)
+        hn = L.rmsnorm(blk["ffn_norm"], h, cfg.norm_eps)
+        h = h + L.mlp(blk["ffn"], hn, act=cfg.mlp_act).astype(h.dtype)
+        return h, (new_self, new_cross)
+
+    if remat:
+        body = jax.checkpoint(body,
+                              policy=jax.checkpoint_policies.nothing_saveable)
+    xs = (params["decoder"]["blocks"],
+          caches["self"] if caches else None,
+          caches["cross"] if caches else None)
+    h, new_caches = jax.lax.scan(body, h, xs)
+    h = L.rmsnorm(params["final_norm"], h, cfg.norm_eps)
+    if caches is not None:
+        new_caches = {"self": new_caches[0], "cross": new_caches[1]}
+    else:
+        new_caches = None
+    return h, new_caches
+
+
+def build_cross_cache(params, cfg, memory):
+    """Precompute per-layer cross-attention K/V from the encoder output."""
+
+    def body(_, blk):
+        hn = memory  # cross K/V projections consume raw encoder output
+        k = L.dense(blk["cross_attn"]["wk"], hn)
+        v = L.dense(blk["cross_attn"]["wv"], hn)
+        shape = (*k.shape[:-1], cfg.num_kv_heads, cfg.head_dim)
+        return None, {"k": k.reshape(shape), "v": v.reshape(shape)}
+
+    _, cache = jax.lax.scan(body, None, params["decoder"]["blocks"])
+    return cache
+
+
+def encdec_train_loss(params, cfg, batch, *, remat=True):
+    """batch: {src_embeds (B,T,d), tokens (B,S), labels (B,S), [mask]}."""
+    memory = encode(params, cfg, batch["src_embeds"], remat=remat)
+    h = L.embed(params["embed"], batch["tokens"]).astype(
+        jnp.dtype(cfg.compute_dtype))
+    h = constrain_batch(h)
+    positions = jnp.arange(h.shape[1])
+    h, _ = _decoder(params, cfg, h, memory, positions=positions, remat=remat)
+    ce = chunked_ce_loss(params, cfg, h, batch["labels"], batch.get("mask"))
+    return ce, {"loss": ce, "ce": ce}
+
+
+def encdec_prefill(params, cfg, batch, caches, *, window=None):
+    """Encode source, build cross caches, prefill decoder self cache."""
+    memory = encode(params, cfg, batch["src_embeds"])
+    cross = build_cross_cache(params, cfg, memory)
+    caches = {"self": caches["self"], "cross": cross}
+    h = L.embed(params["embed"], batch["tokens"]).astype(
+        jnp.dtype(cfg.compute_dtype))
+    positions = jnp.arange(h.shape[1])
+    h, caches = _decoder(params, cfg, h, None, positions=positions,
+                         caches=caches, cache_pos=0, window=window)
+    return lm_logits(params, cfg, h[:, -1:])[:, 0], caches
+
+
+def encdec_decode_step(params, cfg, token, caches, pos, *, window=None):
+    """One decode step against prefilled self+cross caches."""
+    h = L.embed(params["embed"], token).astype(jnp.dtype(cfg.compute_dtype))
+    positions = pos + jnp.arange(1)
+    h, caches = _decoder(params, cfg, h, None, positions=positions,
+                         caches=caches, cache_pos=pos, window=window)
+    return lm_logits(params, cfg, h)[:, 0], caches

@@ -1,0 +1,148 @@
+"""Primitive layers: linear, norms, rotary embeddings, gated MLPs.
+
+All layers are functional: ``*_init(key, ...) -> params`` and a pure apply
+function.  Params are plain dicts of jnp arrays so they stack cleanly along
+a leading layer dimension for ``lax.scan`` and so the sharding rule engine
+(`models/sharding.py`) can address them by path.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _dtype(name):
+    return jnp.dtype(name)
+
+
+# ---------------------------------------------------------------------------
+# Linear
+# ---------------------------------------------------------------------------
+
+
+def dense_init(key, in_dim: int, out_dim: int, *, bias: bool = False,
+               dtype="bfloat16", scale: float | None = None):
+    wkey, _ = jax.random.split(key)
+    scale = scale if scale is not None else 1.0 / np.sqrt(in_dim)
+    p = {"w": (jax.random.normal(wkey, (in_dim, out_dim), jnp.float32) * scale
+               ).astype(_dtype(dtype))}
+    if bias:
+        p["b"] = jnp.zeros((out_dim,), _dtype(dtype))
+    return p
+
+
+def dense(p, x):
+    y = x @ p["w"].astype(x.dtype)
+    if "b" in p:
+        y = y + p["b"].astype(x.dtype)
+    return y
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+
+def rmsnorm_init(dim: int, dtype="bfloat16"):
+    return {"scale": jnp.ones((dim,), _dtype(dtype))}
+
+
+def rmsnorm(p, x, eps: float = 1e-6):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    x = x * jax.lax.rsqrt(var + eps)
+    return (x * p["scale"].astype(jnp.float32)).astype(dt)
+
+
+def layernorm_init(dim: int, dtype="bfloat16"):
+    return {"scale": jnp.ones((dim,), _dtype(dtype)),
+            "bias": jnp.zeros((dim,), _dtype(dtype))}
+
+
+def layernorm(p, x, eps: float = 1e-6):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    x = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (x * p["scale"].astype(jnp.float32)
+            + p["bias"].astype(jnp.float32)).astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings
+# ---------------------------------------------------------------------------
+
+
+def rope_freqs(head_dim: int, theta: float):
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32)
+                            / head_dim))
+
+
+def apply_rope(x, positions, theta: float = 10_000.0):
+    """Rotate ``x`` of shape (..., seq, heads, head_dim) by ``positions``.
+
+    ``positions``: int array broadcastable to x.shape[:-2] + (seq,).
+    Uses the split-half convention (GPT-NeoX / Llama).
+    """
+    head_dim = x.shape[-1]
+    freqs = rope_freqs(head_dim, theta)                     # (hd/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., s, hd/2)
+    cos = jnp.cos(angles)[..., None, :]                     # (..., s, 1, hd/2)
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Gated MLPs
+# ---------------------------------------------------------------------------
+
+_ACTS = {
+    "gelu": jax.nn.gelu,
+    "relu": jax.nn.relu,
+    "silu": jax.nn.silu,
+}
+
+
+def mlp_init(key, d_model: int, d_ff: int, act: str = "swiglu",
+             dtype="bfloat16"):
+    k1, k2, k3 = jax.random.split(key, 3)
+    p = {"up": dense_init(k1, d_model, d_ff, dtype=dtype),
+         "down": dense_init(k2, d_ff, d_model, dtype=dtype)}
+    if act in ("swiglu", "geglu"):
+        p["gate"] = dense_init(k3, d_model, d_ff, dtype=dtype)
+    return p
+
+
+def mlp(p, x, act: str = "swiglu"):
+    if act == "swiglu":
+        h = jax.nn.silu(dense(p["gate"], x)) * dense(p["up"], x)
+    elif act == "geglu":
+        h = jax.nn.gelu(dense(p["gate"], x)) * dense(p["up"], x)
+    else:
+        h = _ACTS[act](dense(p["up"], x))
+    return dense(p["down"], h)
+
+
+# ---------------------------------------------------------------------------
+# Embedding
+# ---------------------------------------------------------------------------
+
+
+def embed_init(key, vocab: int, d_model: int, dtype="bfloat16"):
+    return {"w": (jax.random.normal(key, (vocab, d_model), jnp.float32)
+                  * 0.02).astype(_dtype(dtype))}
+
+
+def embed(p, tokens):
+    return jnp.take(p["w"], tokens, axis=0)
+
+
+def unembed(p, x):
+    """Project activations to logits with the (possibly tied) embedding."""
+    return x @ p["w"].astype(x.dtype).T

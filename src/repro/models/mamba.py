@@ -1,0 +1,225 @@
+"""Mamba-2 mixer via the SSD (state-space duality) chunked algorithm.
+
+arXiv:2405.21060.  The TPU adaptation (DESIGN.md §3): instead of the
+GPU-oriented parallel-scan with warp shuffles, training/prefill use the
+*chunked* SSD form — within-chunk work is a masked-decay quadratic form
+(dense matmuls on the MXU), across-chunk work is a tiny ``lax.scan`` over
+(H, P, N) states.  Decode is the O(1)-per-token recurrence.
+
+Shapes: d_inner = expand·d_model, H = d_inner/P heads, G groups for B/C,
+N state dim.  Cache = {"conv": (B, W-1, d_conv_ch), "ssm": (B, H, P, N)}.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import layers as L
+
+
+def mamba_init(key, cfg):
+    s = cfg.ssm
+    d = cfg.d_model
+    di = s.d_inner(d)
+    H = s.num_heads(d)
+    gn = s.num_groups * s.d_state
+    conv_ch = di + 2 * gn
+    dt = jnp.dtype(cfg.param_dtype)
+    keys = jax.random.split(key, 4)
+
+    # dt bias: softplus^-1 of dt ~ logU[1e-3, 0.1]  (mamba2 reference init)
+    u = jax.random.uniform(keys[2], (H,), jnp.float32)
+    dt0 = jnp.exp(u * (np.log(0.1) - np.log(1e-3)) + np.log(1e-3))
+    dt_bias = dt0 + jnp.log(-jnp.expm1(-dt0))
+
+    return {
+        "in_proj": L.dense_init(keys[0], d, 2 * di + 2 * gn + H, dtype=cfg.param_dtype),
+        "conv_w": (jax.random.normal(keys[1], (s.conv_width, conv_ch), jnp.float32)
+                   / np.sqrt(s.conv_width)).astype(dt),
+        "conv_b": jnp.zeros((conv_ch,), dt),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, H, dtype=jnp.float32)),
+        "D": jnp.ones((H,), jnp.float32),
+        "dt_bias": dt_bias,
+        "gated_norm": L.rmsnorm_init(di, dtype=cfg.param_dtype),
+        "out_proj": L.dense_init(keys[3], di, d, dtype=cfg.param_dtype),
+    }
+
+
+def init_mamba_cache(cfg, batch: int, dtype=None):
+    s = cfg.ssm
+    d = cfg.d_model
+    di = s.d_inner(d)
+    H = s.num_heads(d)
+    gn = s.num_groups * s.d_state
+    dtype = dtype or jnp.dtype(cfg.compute_dtype)
+    return {
+        "conv": jnp.zeros((batch, s.conv_width - 1, di + 2 * gn), dtype),
+        "ssm": jnp.zeros((batch, H, s.head_dim, s.d_state), jnp.float32),
+    }
+
+
+def _causal_conv(u, w, b):
+    """Depthwise causal conv via shifted adds (width is tiny)."""
+    W = w.shape[0]
+    out = u * w[-1].astype(u.dtype)
+    for i in range(1, W):
+        shifted = jnp.pad(u[:, :-i], ((0, 0), (i, 0), (0, 0)))
+        out = out + shifted * w[W - 1 - i].astype(u.dtype)
+    return out + b.astype(u.dtype)
+
+
+def _split_in_proj(p, x, cfg):
+    s = cfg.ssm
+    d = cfg.d_model
+    di = s.d_inner(d)
+    gn = s.num_groups * s.d_state
+    zxbcdt = L.dense(p["in_proj"], x)
+    z = zxbcdt[..., :di]
+    xbc = zxbcdt[..., di: 2 * di + 2 * gn]
+    dt_raw = zxbcdt[..., 2 * di + 2 * gn:]
+    return z, xbc, dt_raw
+
+
+def _ssd_chunked(xh, dt, A, Bm, Cm, cfg, h0):
+    """Chunked SSD scan.
+
+    xh (b,s,H,P), dt (b,s,H) post-softplus, A (H,) negative,
+    Bm/Cm (b,s,G,N).  Returns (y (b,s,H,P), h_final (b,H,P,N)).
+    """
+    s_cfg = cfg.ssm
+    b, S, H, P = xh.shape
+    G = s_cfg.num_groups
+    R = H // G
+    Q = min(s_cfg.chunk_size, S)
+    pad = (-S) % Q
+    if pad:
+        pz = lambda a: jnp.pad(a, [(0, 0), (0, pad)] + [(0, 0)] * (a.ndim - 2))
+        # dt must pad with ZEROS post-softplus semantics: a padded step must
+        # neither decay the carried state (exp(dt*A)=1) nor inject input
+        # (dt*B*x=0), otherwise the final state handed to decode is wrong.
+        xh, dt, Bm, Cm = pz(xh), pz(dt), pz(Bm), pz(Cm)
+    Sp = S + pad
+    c = Sp // Q
+
+    f32 = jnp.float32
+    xdt = xh * dt[..., None]                                  # (b,Sp,H,P)
+    dA = (dt * A).reshape(b, c, Q, H).astype(f32)             # negative
+    cs = jnp.cumsum(dA, axis=2)                               # (b,c,Q,H)
+
+    def grp(t):  # (b,Sp,H,...) -> (b,c,Q,G,R,...)
+        return t.reshape(b, c, Q, G, R, *t.shape[3:])
+
+    x_g = grp(xdt)                                            # (b,c,Q,G,R,P)
+    cs_g = cs.reshape(b, c, Q, G, R)
+    Bc = Bm.reshape(b, c, Q, G, s_cfg.d_state)
+    Cc = Cm.reshape(b, c, Q, G, s_cfg.d_state)
+    mask = jnp.tril(jnp.ones((Q, Q), bool))[:, None, None, :]
+
+    # §Perf H7: intra-chunk work runs INSIDE the chunk scan — the masked
+    # decay tensor (Q,G,R,Q) and its einsums exist for one chunk at a time
+    # (before-state materialized (b,c,Q,G,R,Q) across all chunks at once:
+    # ~34 GiB/dev on jamba prefill_32k).  This mirrors the per-chunk grid
+    # of the Pallas kernel (kernels/ssd_pallas.py).
+    def step(h, inp):
+        xg, csg, bc, cc = inp          # (b,Q,G,R,P) (b,Q,G,R) (b,Q,G,N) x2
+        xg = xg.astype(f32)
+        csg = csg.astype(f32)
+        att = jnp.einsum("bqgn,blgn->bgql", cc.astype(f32), bc.astype(f32))
+        diff = csg[:, :, :, :, None] - jnp.moveaxis(
+            csg, 1, -1)[:, None, :, :, :]                      # (b,q,g,r,l)
+        ldec = jnp.where(mask[None], jnp.exp(diff), 0.0)
+        m = jnp.einsum("bgql,bqgrl->bqgrl", att, ldec)
+        y_diag = jnp.einsum("bqgrl,blgrp->bqgrp", m, xg)
+
+        decay_last = jnp.exp(csg[:, -1:] - csg)                # (b,Q,G,R)
+        state = jnp.einsum("bqgn,bqgr,bqgrp->bgrpn",
+                           bc.astype(f32), decay_last, xg)
+        y_off = jnp.einsum("bqgn,bgrpn,bqgr->bqgrp",
+                           cc.astype(f32), h, jnp.exp(csg))
+        chunk_decay = jnp.exp(csg[:, -1])                      # (b,G,R)
+        h_next = h * chunk_decay[..., None, None] + state
+        return h_next, (y_diag + y_off)
+
+    if h0 is None:
+        h0 = jnp.zeros((b, G, R, P, s_cfg.d_state), f32)
+    h_final, ys = jax.lax.scan(
+        step, h0,
+        (jnp.moveaxis(x_g, 1, 0), jnp.moveaxis(cs_g, 1, 0),
+         jnp.moveaxis(Bc, 1, 0), jnp.moveaxis(Cc, 1, 0)))
+
+    y = jnp.moveaxis(ys, 0, 1).reshape(b, Sp, H, P)
+    if pad:
+        y = y[:, :S]
+    return y, h_final.reshape(b, H, P, s_cfg.d_state)
+
+
+def mamba_apply(p, x, cfg, *, cache=None):
+    """Mamba2 mixer.  x: (B,S,d) -> (out, new_cache)."""
+    s = cfg.ssm
+    d = cfg.d_model
+    di = s.d_inner(d)
+    H = s.num_heads(d)
+    P = s.head_dim
+    G, N = s.num_groups, s.d_state
+    cdt = jnp.dtype(cfg.compute_dtype)
+    x = x.astype(cdt)
+    B_, S, _ = x.shape
+
+    z, xbc_pre, dt_raw = _split_in_proj(p, x, cfg)
+    A = -jnp.exp(p["A_log"])                                   # (H,)
+
+    if cache is None or S > 1:
+        if cache is not None:
+            # continuation: the causal conv needs the previous W-1 inputs
+            tail = cache["conv"].astype(xbc_pre.dtype)
+            xbc_in = jnp.concatenate([tail, xbc_pre], axis=1)
+            xbc = jax.nn.silu(_causal_conv(xbc_in, p["conv_w"],
+                                           p["conv_b"]))[:, tail.shape[1]:]
+        else:
+            xbc = jax.nn.silu(_causal_conv(xbc_pre, p["conv_w"], p["conv_b"]))
+        xh = xbc[..., :di].reshape(B_, S, H, P)
+        Bm = xbc[..., di: di + G * N].reshape(B_, S, G, N)
+        Cm = xbc[..., di + G * N:].reshape(B_, S, G, N)
+        dt = jax.nn.softplus(dt_raw.astype(jnp.float32)
+                             + p["dt_bias"])                   # (B,S,H)
+        h0 = None
+        if cache is not None:
+            h0 = cache["ssm"].reshape(B_, G, H // G, P, N)
+        y, h_fin = _ssd_chunked(xh, dt, A, Bm, Cm, cfg, h0)
+        new_cache = None
+        if cache is not None:
+            tail = s.conv_width - 1
+            conv_tail = xbc_pre[:, -tail:] if S >= tail else jnp.concatenate(
+                [cache["conv"][:, S:], xbc_pre], axis=1)
+            new_cache = {"conv": conv_tail.astype(cache["conv"].dtype),
+                         "ssm": h_fin}
+    else:
+        # ---- single-token recurrent decode ---------------------------------
+        window = jnp.concatenate(
+            [cache["conv"].astype(cdt), xbc_pre], axis=1)      # (B,W,ch)
+        xbc = jnp.einsum("bwc,wc->bc", window, p["conv_w"].astype(cdt))
+        xbc = jax.nn.silu(xbc + p["conv_b"].astype(cdt))
+        xh = xbc[:, :di].reshape(B_, H, P)
+        Bm = xbc[:, di: di + G * N].reshape(B_, G, N)
+        Cm = xbc[:, di + G * N:].reshape(B_, G, N)
+        dt = jax.nn.softplus(dt_raw[:, 0].astype(jnp.float32)
+                             + p["dt_bias"])                   # (B,H)
+        h = cache["ssm"]                                       # (B,H,P,N) f32
+        decay = jnp.exp(dt * A)                                # (B,H)
+        Bh = jnp.repeat(Bm, H // G, axis=1)                    # (B,H,N)
+        Ch = jnp.repeat(Cm, H // G, axis=1)
+        upd = (dt[..., None] * xh).astype(jnp.float32)         # (B,H,P)
+        h = h * decay[..., None, None] + upd[..., None] * Bh[:, :, None, :].astype(jnp.float32)
+        y = jnp.einsum("bhpn,bhn->bhp", h, Ch.astype(jnp.float32))
+        y = y.reshape(B_, 1, H, P)
+        new_cache = {"conv": window[:, 1:].astype(cache["conv"].dtype),
+                     "ssm": h}
+
+    xh_full = (xbc[..., :di].reshape(B_, S, H, P) if (cache is None or S > 1)
+               else xh.reshape(B_, 1, H, P))
+    y = y + p["D"][None, None, :, None] * xh_full.astype(y.dtype)
+    y = y.reshape(B_, S, di).astype(cdt)
+    y = L.rmsnorm(p["gated_norm"], y * jax.nn.silu(z), cfg.norm_eps)
+    return L.dense(p["out_proj"], y), new_cache

@@ -1,0 +1,170 @@
+"""Multi-head Latent Attention (DeepSeek-V2/V3, arXiv:2412.19437).
+
+Queries and keys/values are projected through low-rank latents; only the
+compressed KV latent (``kv_lora_rank`` wide) plus a small shared RoPE key
+is cached, cutting decode KV-cache bytes by ~an order of magnitude vs GQA.
+
+Two execution paths:
+
+* **expanded** (train / prefill): latents are up-projected to per-head
+  K/V and attention proceeds normally — matmul-rich, MXU friendly.
+* **absorbed** (decode): the up-projections are algebraically absorbed
+  into the query / output sides, so attention runs directly against the
+  compressed cache.  For the ``long_500k`` shape this avoids materializing
+  a (B, 500k, H, 256) expanded key tensor — per-step work is O(S ·
+  (kv_lora + rope_dim)) instead of O(S · H · qk_dim).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import layers as L
+
+NEG_INF = -1e30
+
+
+def mla_init(key, cfg):
+    m = cfg.mla
+    d = cfg.d_model
+    H = cfg.num_heads
+    dt = cfg.param_dtype
+    keys = jax.random.split(key, 5)
+    qk_head = m.qk_nope_head_dim + m.qk_rope_head_dim
+    return {
+        "wq_a": L.dense_init(keys[0], d, m.q_lora_rank, dtype=dt),
+        "q_norm": L.rmsnorm_init(m.q_lora_rank, dtype=dt),
+        "wq_b": L.dense_init(keys[1], m.q_lora_rank, H * qk_head, dtype=dt),
+        "wkv_a": L.dense_init(keys[2], d, m.kv_lora_rank + m.qk_rope_head_dim,
+                              dtype=dt),
+        "kv_norm": L.rmsnorm_init(m.kv_lora_rank, dtype=dt),
+        "wkv_b": L.dense_init(keys[3], m.kv_lora_rank,
+                              H * (m.qk_nope_head_dim + m.v_head_dim), dtype=dt),
+        "wo_mla": L.dense_init(keys[4], H * m.v_head_dim, d, dtype=dt),
+    }
+
+
+def init_mla_cache(cfg, batch: int, max_seq: int, dtype=None):
+    m = cfg.mla
+    dtype = dtype or jnp.dtype(cfg.compute_dtype)
+    return {
+        "ckv": jnp.zeros((batch, max_seq, m.kv_lora_rank), dtype),
+        "krope": jnp.zeros((batch, max_seq, m.qk_rope_head_dim), dtype),
+    }
+
+
+def _project_q(p, x, cfg, positions):
+    m = cfg.mla
+    H = cfg.num_heads
+    cq = L.rmsnorm(p["q_norm"], L.dense(p["wq_a"], x), cfg.norm_eps)
+    q = L.dense(p["wq_b"], cq)
+    q = q.reshape(*q.shape[:-1], H, m.qk_nope_head_dim + m.qk_rope_head_dim)
+    q_nope = q[..., : m.qk_nope_head_dim]
+    q_rope = L.apply_rope(q[..., m.qk_nope_head_dim:], positions,
+                          cfg.rope_theta)
+    return q_nope, q_rope
+
+
+def _project_kv_latent(p, x, cfg, positions):
+    m = cfg.mla
+    ckv_full = L.dense(p["wkv_a"], x)
+    ckv = L.rmsnorm(p["kv_norm"], ckv_full[..., : m.kv_lora_rank], cfg.norm_eps)
+    k_rope = ckv_full[..., m.kv_lora_rank:]
+    # shared-across-heads rope key: add a head axis for apply_rope.
+    k_rope = L.apply_rope(k_rope[..., None, :], positions,
+                          cfg.rope_theta)[..., 0, :]
+    return ckv, k_rope
+
+
+def _split_wkv_b(p, cfg):
+    m = cfg.mla
+    H = cfg.num_heads
+    w = p["wkv_b"]["w"]                                     # (r, H*(dn+dv))
+    w = w.reshape(m.kv_lora_rank, H, m.qk_nope_head_dim + m.v_head_dim)
+    return w[..., : m.qk_nope_head_dim], w[..., m.qk_nope_head_dim:]
+
+
+def mla_attention(p, x, cfg, *, positions, window=None, cache=None,
+                  cache_pos=None):
+    """MLA forward.  Same contract as ``attention.attention``."""
+    m = cfg.mla
+    B, S, _ = x.shape
+    cdt = jnp.dtype(cfg.compute_dtype)
+    x = x.astype(cdt)
+    scale = 1.0 / np.sqrt(m.qk_nope_head_dim + m.qk_rope_head_dim)
+
+    q_nope, q_rope = _project_q(p, x, cfg, positions)
+    ckv, k_rope = _project_kv_latent(p, x, cfg, positions)
+    w_uk, w_uv = _split_wkv_b(p, cfg)
+
+    new_cache = None
+    if cache is not None:
+        ckv_c = jax.lax.dynamic_update_slice_in_dim(
+            cache["ckv"], ckv.astype(cache["ckv"].dtype), cache_pos, axis=1)
+        kr_c = jax.lax.dynamic_update_slice_in_dim(
+            cache["krope"], k_rope.astype(cache["krope"].dtype), cache_pos, axis=1)
+        new_cache = {"ckv": ckv_c, "krope": kr_c}
+        if window is not None and S == 1 and ckv_c.shape[1] > 2 * window:
+            # H3 (§Perf): windowed decode against the live cache slice only.
+            start = jnp.clip(cache_pos - window + 1, 0,
+                             ckv_c.shape[1] - window)
+            ckv_used = jax.lax.dynamic_slice_in_dim(ckv_c, start, window, 1)
+            kr_used = jax.lax.dynamic_slice_in_dim(kr_c, start, window, 1)
+            kp_base = start
+            kv_len = window
+        else:
+            ckv_used, kr_used = ckv_c, kr_c
+            kp_base = 0
+            kv_len = ckv_c.shape[1]
+
+    if cache is not None and S == 1:
+        # --- absorbed decode ------------------------------------------------
+        # scores = q_nope · (W_uk c) + q_rope · k_rope
+        q_abs = jnp.einsum("bshd,rhd->bshr", q_nope, w_uk.astype(cdt))
+        s_nope = jnp.einsum("bshr,btr->bhst", q_abs, ckv_used.astype(cdt),
+                            preferred_element_type=jnp.float32)
+        s_rope = jnp.einsum("bshd,btd->bhst", q_rope, kr_used.astype(cdt),
+                            preferred_element_type=jnp.float32)
+        scores = (s_nope + s_rope) * scale
+        kp = (kp_base + jnp.arange(kv_len))[None]
+        qp = positions[None] if positions.ndim == 1 else positions
+        mask = (kp[:, None, :] <= qp[..., None])
+        if window is not None:
+            mask &= kp[:, None, :] > qp[..., None] - window
+        scores = jnp.where(mask[:, None], scores, NEG_INF)
+        w = jax.nn.softmax(scores, axis=-1)
+        o_lat = jnp.einsum("bhst,btr->bshr", w.astype(cdt),
+                           ckv_used.astype(cdt))
+        out = jnp.einsum("bshr,rhd->bshd", o_lat, w_uv.astype(cdt))
+    else:
+        # --- expanded train / prefill ----------------------------------------
+        k_nope = jnp.einsum("btr,rhd->bthd", ckv, w_uk.astype(cdt))
+        v = jnp.einsum("btr,rhd->bthd", ckv, w_uv.astype(cdt))
+        k_rope_h = jnp.broadcast_to(k_rope[:, :, None, :],
+                                    (*k_rope.shape[:2], cfg.num_heads,
+                                     m.qk_rope_head_dim))
+        q = jnp.concatenate([q_nope, q_rope], axis=-1)
+        k = jnp.concatenate([k_nope, k_rope_h], axis=-1)
+        from repro.models.attention import (BLOCKED_ATTN_THRESHOLD,
+                                            blocked_attention)
+        if S >= BLOCKED_ATTN_THRESHOLD:
+            qpos = positions if positions.ndim == 1 else positions[0]
+            out = blocked_attention(q, k, v, causal=True, window=window,
+                                    q_positions=qpos, k_positions=qpos,
+                                    scale=scale)
+        else:
+            scores = jnp.einsum("bshd,bthd->bhst", q, k,
+                                preferred_element_type=jnp.float32) * scale
+            qp = positions[None] if positions.ndim == 1 else positions
+            kp = qp
+            mask = kp[:, None, :] <= qp[..., None]
+            if window is not None:
+                mask &= kp[:, None, :] > qp[..., None] - window
+            scores = jnp.where(mask[:, None], scores, NEG_INF)
+            w = jax.nn.softmax(scores, axis=-1)
+            out = jnp.einsum("bhst,bthd->bshd", w.astype(cdt), v)
+
+    out = out.reshape(B, S, cfg.num_heads * m.v_head_dim)
+    return L.dense(p["wo_mla"], out), new_cache

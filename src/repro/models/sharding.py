@@ -1,0 +1,229 @@
+"""Sharding rules: map parameter/activation pytrees to PartitionSpecs.
+
+The framework keeps model code sharding-agnostic.  Distribution is applied
+at the jit boundary (``in_shardings`` / ``out_shardings`` computed here) plus
+a small number of in-graph ``with_sharding_constraint`` hints, which are
+no-ops unless a mesh context has been installed via :func:`use_mesh`.
+
+Conventions (see DESIGN.md §4):
+
+* ``model`` axis: tensor parallelism — attention heads, FFN hidden dim,
+  vocab dim of embedding/LM-head, and the expert dim of MoE tensors.
+* ``data`` axis: batch data-parallelism and FSDP (ZeRO-3) sharding of
+  parameters/optimizer state along a non-model dimension when divisible.
+* ``pod`` axis (multi-pod mesh only): pure data parallelism across pods.
+
+Rules are *divisibility-checked*: a dimension is only sharded if it divides
+evenly by the axis size; otherwise the rule falls back to replication for
+that dim.  This is what lets one rule engine serve 10 architectures.
+"""
+
+from __future__ import annotations
+
+import re
+from contextlib import contextmanager
+from typing import Optional
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# ---------------------------------------------------------------------------
+# Mesh context
+# ---------------------------------------------------------------------------
+
+_ACTIVE_MESH: Optional[Mesh] = None
+
+
+@contextmanager
+def use_mesh(mesh: Mesh):
+    """Install ``mesh`` so in-graph constraints become active."""
+    global _ACTIVE_MESH
+    prev = _ACTIVE_MESH
+    _ACTIVE_MESH = mesh
+    try:
+        with mesh:
+            yield mesh
+    finally:
+        _ACTIVE_MESH = prev
+
+
+def active_mesh() -> Optional[Mesh]:
+    return _ACTIVE_MESH
+
+
+def data_axes(mesh: Mesh):
+    """Axes used for batch data parallelism: ('pod','data') or ('data',)."""
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def constrain(x, *spec):
+    """``with_sharding_constraint`` if a mesh context is active, else id.
+
+    ``spec`` entries may be None, an axis name, or a tuple of axis names.
+    Axis names absent from the active mesh are dropped (so the same model
+    code runs on single-pod and multi-pod meshes).
+    """
+    mesh = _ACTIVE_MESH
+    if mesh is None:
+        return x
+
+    def fix(entry):
+        if entry is None:
+            return None
+        if isinstance(entry, str):
+            return entry if entry in mesh.axis_names else None
+        ent = tuple(a for a in entry if a in mesh.axis_names)
+        return ent if ent else None
+
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P(*[fix(e) for e in spec])))
+
+
+def constrain_batch(x, batch_dim: int = 0):
+    """Shard the batch dim over (pod, data) when divisible, else replicate."""
+    mesh = _ACTIVE_MESH
+    if mesh is None:
+        return x
+    axes = data_axes(mesh)
+    size = int(np.prod([mesh.shape[a] for a in axes]))
+    if x.shape[batch_dim] % size != 0:
+        return x
+    spec = [None] * x.ndim
+    spec[batch_dim] = axes
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, P(*spec)))
+
+
+# ---------------------------------------------------------------------------
+# Parameter sharding rules
+# ---------------------------------------------------------------------------
+
+# Each rule: (path regex, spec builder). Specs are given for the *unstacked*
+# parameter; a leading scan/stack dimension (layers) is detected by ndim
+# mismatch and padded with None on the left.
+#
+# Dimension tags:  'm' -> model axis, 'f' -> fsdp(data) axis, '.' -> None.
+_RULES = [
+    # Embedding / LM head: vocab on model, d_model on fsdp.
+    (r"(^|/)embed(/w)?$", "mf"),
+    (r"(^|/)lm_head(/w)?$", "fm"),
+    (r"(^|/)mtp.*proj(/w)?$", "fm"),
+    # Attention projections.
+    (r"wq(/w)?$", "fm"),
+    (r"wk(/w)?$", "fm"),
+    (r"wv(/w)?$", "fm"),
+    (r"wo(/w)?$", "mf"),
+    (r"w(q|k|v)/b$", "m"),
+    # MLA projections.
+    (r"wq_a(/w)?$", "f."),
+    (r"wq_b(/w)?$", ".m"),
+    (r"wkv_a(/w)?$", "f."),
+    (r"wkv_b(/w)?$", ".m"),
+    (r"wo_mla(/w)?$", "mf"),
+    # MoE: expert-stacked tensors (E, d, ff) / (E, ff, d).  MUST precede
+    # the dense-FFN rules — the generic (gate|up)$ pattern also matches
+    # "experts/gate" and silently shadowed this rule until §Perf H11
+    # caught it via a failing sharding test (rule order made H2 a no-op).
+    # H2/H11: experts shard over the DATA axis (expert parallelism) with
+    # the expert-ff dim over MODEL — expert params never FSDP-gather or
+    # grad-reduce over data; the token all-to-all replaces weight movement.
+    # 'F' spans (pod, data) so multi-pod meshes shard experts 32-way (H8).
+    (r"experts/(gate|up)$", "F.m"),
+    (r"experts/down$", "Fm."),
+    # Dense FFN.
+    (r"(gate|up)(/w)?$", "fm"),
+    (r"down(/w)?$", "mf"),
+    (r"router(/w)?$", "f."),
+    (r"shared/(gate|up)(/w)?$", "fm"),
+    (r"shared/down(/w)?$", "mf"),
+    # Mamba2.
+    (r"in_proj(/w)?$", "fm"),
+    (r"out_proj(/w)?$", "mf"),
+    (r"conv_w$", "..m"),
+    (r"conv_b$", "m"),
+    (r"(A_log|D|dt_bias)$", "m"),
+    # Norm scales and other small vectors: replicate.
+    (r".*", None),
+]
+
+
+def _spec_for(path: str, ndim: int, shape, mesh: Mesh) -> P:
+    fsdp = "data" if "data" in mesh.axis_names else None
+    model = "model" if "model" in mesh.axis_names else None
+    axis_size = {a: mesh.shape[a] for a in mesh.axis_names}
+    big_fsdp = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    for pat, tags in _RULES:
+        if re.search(pat, path):
+            if tags is None:
+                return P()
+            spec = []
+            for tag in tags:
+                if tag == "m":
+                    spec.append(model)
+                elif tag == "f":
+                    spec.append(fsdp)
+                elif tag == "F":
+                    spec.append(big_fsdp if big_fsdp else None)
+                else:
+                    spec.append(None)
+            # left-pad for stacked (scan) leading dims
+            spec = [None] * (ndim - len(spec)) + spec
+            spec = spec[:ndim]
+            # divisibility check: drop axes that don't divide
+            out = []
+            for dim, ax in zip(shape, spec):
+                if ax is not None:
+                    size = (int(np.prod([axis_size[a] for a in ax]))
+                            if isinstance(ax, tuple) else axis_size[ax])
+                    if dim % size != 0:
+                        # tuple axes degrade to their first component
+                        if (isinstance(ax, tuple) and len(ax) > 1
+                                and dim % axis_size[ax[-1]] == 0):
+                            ax = ax[-1]
+                        else:
+                            ax = None
+                out.append(ax)
+            return P(*out)
+    return P()
+
+
+def params_pspecs(params, mesh: Mesh):
+    """PartitionSpec pytree mirroring ``params`` (arrays or ShapeDtypeStructs)."""
+
+    def walk(node, path):
+        if isinstance(node, dict):
+            return {k: walk(v, f"{path}/{k}" if path else k) for k, v in node.items()}
+        if isinstance(node, (list, tuple)):
+            seq = [walk(v, f"{path}/{i}") for i, v in enumerate(node)]
+            return type(node)(seq)
+        return _spec_for(path, node.ndim, node.shape, mesh)
+
+    return walk(params, "")
+
+
+def params_shardings(params, mesh: Mesh):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), params_pspecs(params, mesh),
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def batch_pspec(mesh: Mesh, ndim: int, batch_dim: int = 0, batch_size: int = None) -> P:
+    axes = data_axes(mesh)
+    size = int(np.prod([mesh.shape[a] for a in axes]))
+    spec = [None] * ndim
+    if batch_size is None or batch_size % size == 0:
+        spec[batch_dim] = axes
+    return P(*spec)
+
+
+def kv_cache_pspec(mesh: Mesh, *, batch: int, ndim: int, batch_dim: int,
+                   seq_dim: int) -> P:
+    """KV-cache spec: batch over (pod,data) when divisible; otherwise shard
+    the sequence dim over 'data' (flash-decode style) and replicate batch."""
+    axes = data_axes(mesh)
+    size = int(np.prod([mesh.shape[a] for a in axes]))
+    spec = [None] * ndim
+    if batch % size == 0:
+        spec[batch_dim] = axes
+    else:
+        spec[seq_dim] = "data" if "data" in mesh.axis_names else None
+    return P(*spec)

@@ -1,0 +1,364 @@
+"""Decoder-only transformer covering dense / MoE / SSM / hybrid / VLM archs.
+
+Layer heterogeneity (Jamba's 1-attn-per-8 interleave, DeepSeek's
+first-3-dense-then-MoE, Mamba2's FFN-free blocks) is expressed as
+**segments**: maximal runs of a repeating layer-type period.  Each segment's
+parameters are stacked along a leading ``repeats`` axis and executed with
+``lax.scan`` so compile time and HLO size stay O(period), not O(num_layers)
+— essential for AOT-compiling a 61-layer 671B config on this container.
+
+The LM head never materializes (B, S, vocab) logits for training: the loss
+is computed by a sequence-chunked scan (``chunked_ce_loss``), keeping peak
+logits memory at (B, chunk, vocab_shard).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models import attention as A
+from repro.models import mla as MLA
+from repro.models import mamba as M
+from repro.models import moe as MOE
+from repro.models.sharding import constrain, constrain_batch
+
+# ---------------------------------------------------------------------------
+# Layer plan
+# ---------------------------------------------------------------------------
+
+
+def layer_types(cfg):
+    """Per-layer (mixer, ffn) type tags."""
+    out = []
+    for i in range(cfg.num_layers):
+        if cfg.is_attn_layer(i):
+            mixer = "mla" if cfg.use_mla else "attn"
+        else:
+            mixer = "ssm"
+        if cfg.d_ff == 0 and not cfg.is_moe_layer(i):
+            ffn = "none"
+        else:
+            ffn = "moe" if cfg.is_moe_layer(i) else "dense"
+        out.append((mixer, ffn))
+    return out
+
+
+def build_plan(cfg):
+    """Segments: list of (repeats, period_types tuple)."""
+    types = layer_types(cfg)
+    segments = []
+    i = 0
+    # leading non-periodic prefix (e.g. DeepSeek first-3 dense layers)
+    fd = cfg.first_dense_layers
+    if fd:
+        # prefix is homogeneous by construction
+        assert all(t == types[0] for t in types[:fd])
+        segments.append((fd, (types[0],)))
+        i = fd
+    rest = types[i:]
+    if not rest:
+        return segments
+    # find the smallest period that tiles the rest
+    period = 1
+    while period <= len(rest):
+        if len(rest) % period == 0:
+            pat = rest[:period]
+            if all(rest[j] == pat[j % period] for j in range(len(rest))):
+                break
+        period += 1
+    segments.append((len(rest) // period, tuple(rest[:period])))
+    return segments
+
+
+# ---------------------------------------------------------------------------
+# Blocks
+# ---------------------------------------------------------------------------
+
+
+def _block_init(key, cfg, mixer, ffn):
+    k1, k2, k3 = jax.random.split(key, 3)
+    p = {"mixer_norm": L.rmsnorm_init(cfg.d_model, dtype=cfg.param_dtype)}
+    if mixer == "attn":
+        p["attn"] = A.attn_init(k1, cfg)
+    elif mixer == "mla":
+        p["mla"] = MLA.mla_init(k1, cfg)
+    else:
+        p["ssm"] = M.mamba_init(k1, cfg)
+    if ffn == "dense":
+        p["ffn_norm"] = L.rmsnorm_init(cfg.d_model, dtype=cfg.param_dtype)
+        p["ffn"] = L.mlp_init(k2, cfg.d_model, cfg.d_ff, act=cfg.mlp_act,
+                              dtype=cfg.param_dtype)
+    elif ffn == "moe":
+        p["ffn_norm"] = L.rmsnorm_init(cfg.d_model, dtype=cfg.param_dtype)
+        p["moe"] = MOE.moe_init(k3, cfg)
+    return p
+
+
+def _block_cache(cfg, mixer, batch, max_seq, dtype=None):
+    if mixer == "attn":
+        return A.init_kv_cache(cfg, batch, max_seq, dtype)
+    if mixer == "mla":
+        return MLA.init_mla_cache(cfg, batch, max_seq, dtype)
+    return M.init_mamba_cache(cfg, batch, dtype)
+
+
+def _block_apply(p, cfg, h, mixer, ffn, *, positions, window,
+                 cache=None, cache_pos=None):
+    aux = jnp.zeros((), jnp.float32)
+    hn = L.rmsnorm(p["mixer_norm"], h, cfg.norm_eps)
+    if mixer == "attn":
+        out, new_cache = A.attention(p["attn"], hn, cfg, positions=positions,
+                                     window=window, cache=cache,
+                                     cache_pos=cache_pos)
+    elif mixer == "mla":
+        out, new_cache = MLA.mla_attention(p["mla"], hn, cfg,
+                                           positions=positions, window=window,
+                                           cache=cache, cache_pos=cache_pos)
+    else:
+        out, new_cache = M.mamba_apply(p["ssm"], hn, cfg, cache=cache)
+    h = h + out.astype(h.dtype)
+    if ffn == "dense":
+        hn = L.rmsnorm(p["ffn_norm"], h, cfg.norm_eps)
+        h = h + L.mlp(p["ffn"], hn, act=cfg.mlp_act).astype(h.dtype)
+    elif ffn == "moe":
+        hn = L.rmsnorm(p["ffn_norm"], h, cfg.norm_eps)
+        out, metrics = MOE.moe_apply(p["moe"], hn, cfg)
+        h = h + out.astype(h.dtype)
+        aux = aux + cfg.router_aux_weight * metrics["moe_aux_loss"] \
+            + cfg.router_z_weight * metrics["moe_z_loss"]
+    return h, new_cache, aux
+
+
+# ---------------------------------------------------------------------------
+# Model init / forward
+# ---------------------------------------------------------------------------
+
+
+def init_lm(key, cfg):
+    plan = build_plan(cfg)
+    keys = jax.random.split(key, len(plan) + 3)
+    params = {"embed": L.embed_init(keys[0], cfg.vocab_size, cfg.d_model,
+                                    dtype=cfg.param_dtype),
+              "final_norm": L.rmsnorm_init(cfg.d_model, dtype=cfg.param_dtype)}
+    if not cfg.tie_embeddings:
+        params["lm_head"] = L.dense_init(keys[1], cfg.d_model, cfg.vocab_size,
+                                         dtype=cfg.param_dtype)
+    segments = []
+    for si, (repeats, types) in enumerate(plan):
+        seg_keys = jax.random.split(keys[2 + si], repeats)
+        blocks = []
+        for pos, (mixer, ffn) in enumerate(types):
+            pos_keys = jax.vmap(lambda k: jax.random.fold_in(k, pos))(seg_keys)
+            blocks.append(jax.vmap(
+                lambda k: _block_init(k, cfg, mixer, ffn))(pos_keys))
+        segments.append({"blocks": tuple(blocks)})
+    params["segments"] = segments
+    if cfg.mtp_depth > 0:
+        k_mtp = keys[-1]
+        params["mtp"] = {
+            "proj": L.dense_init(jax.random.fold_in(k_mtp, 0),
+                                 2 * cfg.d_model, cfg.d_model,
+                                 dtype=cfg.param_dtype),
+            "norm": L.rmsnorm_init(cfg.d_model, dtype=cfg.param_dtype),
+            "block": _block_init(jax.random.fold_in(k_mtp, 1), cfg,
+                                 "mla" if cfg.use_mla else "attn", "dense"
+                                 if cfg.d_ff else "none"),
+        }
+    return params
+
+
+def init_lm_cache(cfg, batch: int, max_seq: int, dtype=None):
+    caches = []
+    for repeats, types in build_plan(cfg):
+        blocks = []
+        for mixer, _ in types:
+            one = _block_cache(cfg, mixer, batch, max_seq, dtype)
+            blocks.append(jax.tree.map(
+                lambda x: jnp.broadcast_to(x, (repeats, *x.shape)), one))
+        caches.append({"blocks": tuple(blocks)})
+    return caches
+
+
+def lm_hidden(params, cfg, h, *, positions, window=None, caches=None,
+              cache_pos=None, remat=False):
+    """Run all blocks.  h: (B,S,d) embedded input.  Returns
+    (normed hidden, new_caches or None, aux scalar)."""
+    plan = build_plan(cfg)
+    aux = jnp.zeros((), jnp.float32)
+    new_caches = [] if caches is not None else None
+
+    for si, (repeats, types) in enumerate(plan):
+        seg_params = params["segments"][si]["blocks"]
+        seg_cache = caches[si]["blocks"] if caches is not None else None
+
+        def body(carry, xs, types=types):
+            h, aux = carry
+            blk_params, blk_cache = xs
+            new_blk_caches = []
+            for pos, (mixer, ffn) in enumerate(types):
+                c = blk_cache[pos] if blk_cache is not None else None
+                h, nc, a = _block_apply(
+                    blk_params[pos], cfg, h, mixer, ffn,
+                    positions=positions, window=window, cache=c,
+                    cache_pos=cache_pos)
+                aux = aux + a
+                new_blk_caches.append(nc)
+            ys = tuple(new_blk_caches) if blk_cache is not None else None
+            return (h, aux), ys
+
+        if remat:
+            body = jax.checkpoint(
+                body, policy=jax.checkpoint_policies.nothing_saveable)
+        xs = (seg_params, seg_cache)
+        (h, aux), seg_new_cache = jax.lax.scan((lambda c, x: body(c, x)),
+                                               (h, aux), xs)
+        if caches is not None:
+            new_caches.append({"blocks": seg_new_cache})
+
+    h = L.rmsnorm(params["final_norm"], h, cfg.norm_eps)
+    return h, new_caches, aux
+
+
+def embed_inputs(params, cfg, tokens=None, prefix_embeds=None):
+    """Token (and optional VLM/audio prefix) embedding -> (B, S, d)."""
+    parts = []
+    if prefix_embeds is not None:
+        parts.append(prefix_embeds.astype(jnp.dtype(cfg.compute_dtype)))
+    if tokens is not None:
+        parts.append(L.embed(params["embed"], tokens).astype(
+            jnp.dtype(cfg.compute_dtype)))
+    h = parts[0] if len(parts) == 1 else jnp.concatenate(parts, axis=1)
+    return constrain_batch(h)
+
+
+def lm_logits(params, cfg, h):
+    """Full logits — only for small S (decode / eval)."""
+    if cfg.tie_embeddings:
+        logits = L.unembed(params["embed"], h)
+    else:
+        logits = L.dense(params["lm_head"], h)
+    logits = constrain(logits, ("pod", "data"), None, "model")
+    if cfg.logit_softcap:
+        logits = jnp.tanh(logits / cfg.logit_softcap) * cfg.logit_softcap
+    return logits.astype(jnp.float32)
+
+
+def chunked_ce_loss(params, cfg, h, labels, mask=None, chunk: int = 512):
+    """Cross-entropy over (B,S) without materializing (B,S,V) logits.
+
+    Scans over sequence chunks; within a chunk the logits stay sharded over
+    the ``model`` axis in the vocab dim (GSPMD inserts the reduction
+    collectives for logsumexp / label gather).
+    """
+    B, S, d = h.shape
+    chunk = min(chunk, S)
+    pad = (-S) % chunk
+    if pad:
+        h = jnp.pad(h, ((0, 0), (0, pad), (0, 0)))
+        labels = jnp.pad(labels, ((0, 0), (0, pad)))
+        mask = jnp.pad(mask, ((0, 0), (0, pad))) if mask is not None else \
+            jnp.pad(jnp.ones((B, S), jnp.float32), ((0, 0), (0, pad)))
+    elif mask is None:
+        mask = jnp.ones((B, S), jnp.float32)
+    n = (S + pad) // chunk
+    h = h.reshape(B, n, chunk, d)
+    labels = labels.reshape(B, n, chunk)
+    mask = mask.reshape(B, n, chunk)
+
+    def step(carry, xs):
+        tot, cnt = carry
+        hc, lc, mc = xs                                   # (B,chunk,·)
+        logits = lm_logits(params, cfg, hc)               # (B,chunk,V) f32
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, lc[..., None], axis=-1)[..., 0]
+        ce = (lse - gold) * mc
+        return (tot + jnp.sum(ce), cnt + jnp.sum(mc)), None
+
+    (tot, cnt), _ = jax.lax.scan(
+        step, (jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32)),
+        (jnp.moveaxis(h, 1, 0), jnp.moveaxis(labels, 1, 0),
+         jnp.moveaxis(mask, 1, 0)))
+    return tot / jnp.maximum(cnt, 1.0)
+
+
+def mtp_loss(params, cfg, h, tokens, labels_next2, mask=None):
+    """DeepSeek-V3 depth-1 multi-token-prediction auxiliary loss.
+
+    Combines the main-path hidden state at position t with the embedding of
+    token t+1 to predict token t+2.
+    """
+    if "mtp" not in params:
+        return jnp.zeros((), jnp.float32)
+    mp = params["mtp"]
+    B, S, d = h.shape
+    emb_next = L.embed(params["embed"], tokens).astype(h.dtype)
+    hh = jnp.concatenate([L.rmsnorm(mp["norm"], h, cfg.norm_eps),
+                          emb_next], axis=-1)
+    hh = L.dense(mp["proj"], hh)
+    positions = jnp.arange(S)
+    hh2, _, _ = _apply_single_block(mp["block"], cfg, hh, positions)
+    return chunked_ce_loss(params, cfg, hh2, labels_next2, mask)
+
+
+def _apply_single_block(p, cfg, h, positions):
+    mixer = "mla" if cfg.use_mla else "attn"
+    ffn = "dense" if cfg.d_ff else "none"
+    return _block_apply(p, cfg, h, mixer, ffn, positions=positions,
+                        window=cfg.attn_window)
+
+
+# ---------------------------------------------------------------------------
+# Top-level entry points
+# ---------------------------------------------------------------------------
+
+
+def lm_train_loss(params, cfg, batch, *, remat=True):
+    """batch: {tokens (B,S), labels (B,S), [mask], [prefix_embeds]}.
+    Returns (loss, metrics)."""
+    tokens = batch["tokens"]
+    h = embed_inputs(params, cfg, tokens, batch.get("prefix_embeds"))
+    positions = jnp.arange(h.shape[1])
+    h, _, aux = lm_hidden(params, cfg, h, positions=positions,
+                          window=cfg.attn_window, remat=remat)
+    labels = batch["labels"]
+    mask = batch.get("mask")
+    npfx = h.shape[1] - tokens.shape[1]
+    if npfx > 0:                       # VLM prefix: no LM loss on patches
+        h = h[:, npfx:]
+    ce = chunked_ce_loss(params, cfg, h, labels, mask)
+    loss = ce + aux
+    metrics = {"loss": loss, "ce": ce, "aux": aux}
+    if cfg.mtp_depth > 0:
+        shifted = jnp.roll(batch["labels"], -1, axis=1)
+        m = mtp_loss(params, cfg, h, batch["labels"], shifted)
+        loss = loss + 0.3 * m
+        metrics["mtp"] = m
+        metrics["loss"] = loss
+    return loss, metrics
+
+
+def lm_prefill(params, cfg, batch, caches, *, window=None):
+    """Prefill: fill KV caches for the prompt, return last-position logits."""
+    tokens = batch.get("tokens")
+    h = embed_inputs(params, cfg, tokens, batch.get("prefix_embeds"))
+    positions = jnp.arange(h.shape[1])
+    h, caches, _ = lm_hidden(params, cfg, h, positions=positions,
+                             window=window, caches=caches, cache_pos=0)
+    logits = lm_logits(params, cfg, h[:, -1:])
+    return logits[:, 0], caches
+
+
+def lm_decode_step(params, cfg, token, caches, pos, *, window=None):
+    """One decode step.  token: (B,1) int32, pos: scalar int32.
+    Returns (logits (B,V), new caches)."""
+    h = embed_inputs(params, cfg, token)
+    positions = pos + jnp.arange(1)
+    h, caches, _ = lm_hidden(params, cfg, h, positions=positions,
+                             window=window, caches=caches, cache_pos=pos)
+    logits = lm_logits(params, cfg, h)
+    return logits[:, 0], caches

@@ -1,0 +1,7 @@
+from repro.optim.optimizers import (adam, adamw, sgd, Optimizer,
+                                    cosine_schedule, constant_schedule,
+                                    linear_warmup_cosine, clip_by_global_norm)
+
+__all__ = ["adam", "adamw", "sgd", "Optimizer", "cosine_schedule",
+           "constant_schedule", "linear_warmup_cosine",
+           "clip_by_global_norm"]

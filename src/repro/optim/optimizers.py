@@ -1,0 +1,151 @@
+"""Optimizers, schedules and gradient transforms (pure-pytree, optax-free).
+
+An ``Optimizer`` is a pair of pure functions:
+
+  init(params)                      -> opt_state
+  update(grads, opt_state, params, step) -> (new_params, new_opt_state)
+
+Optimizer state mirrors the parameter pytree, so the sharding rule engine
+assigns it the same PartitionSpecs as the parameters (ZeRO-style: state is
+sharded wherever the parameter is).  ``state_dtype`` controls the moment
+dtype — bf16 moments are what let the 671B config fit a single v5e pod
+(DESIGN.md §4, EXPERIMENTS.md §Dry-run).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    init: Callable
+    update: Callable
+
+
+# ---------------------------------------------------------------------------
+# Schedules
+# ---------------------------------------------------------------------------
+
+
+def constant_schedule(lr: float):
+    return lambda step: jnp.asarray(lr, jnp.float32)
+
+
+def cosine_schedule(lr: float, total_steps: int, final_frac: float = 0.1):
+    def f(step):
+        t = jnp.minimum(step / total_steps, 1.0)
+        cos = 0.5 * (1 + jnp.cos(jnp.pi * t))
+        return lr * (final_frac + (1 - final_frac) * cos)
+    return f
+
+
+def linear_warmup_cosine(lr: float, warmup: int, total_steps: int,
+                         final_frac: float = 0.1):
+    cos = cosine_schedule(lr, max(total_steps - warmup, 1), final_frac)
+    def f(step):
+        warm = lr * (step + 1) / max(warmup, 1)
+        return jnp.where(step < warmup, warm, cos(step - warmup))
+    return f
+
+
+# ---------------------------------------------------------------------------
+# Gradient transforms
+# ---------------------------------------------------------------------------
+
+
+def global_norm(tree):
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: g * scale.astype(g.dtype), grads), norm
+
+
+# ---------------------------------------------------------------------------
+# Optimizers
+# ---------------------------------------------------------------------------
+
+
+def sgd(lr, momentum: float = 0.0, nesterov: bool = False):
+    lr_fn = lr if callable(lr) else constant_schedule(lr)
+
+    def init(params):
+        if momentum == 0.0:
+            return {}
+        return {"mu": jax.tree.map(jnp.zeros_like, params)}
+
+    def update(grads, state, params, step):
+        lr_t = lr_fn(step)
+        if momentum == 0.0:
+            new_params = jax.tree.map(
+                lambda p, g: p - (lr_t * g.astype(jnp.float32)).astype(p.dtype),
+                params, grads)
+            return new_params, state
+        mu = jax.tree.map(lambda m, g: momentum * m + g.astype(m.dtype),
+                          state["mu"], grads)
+        upd = jax.tree.map(lambda m, g: momentum * m + g.astype(m.dtype),
+                           mu, grads) if nesterov else mu
+        new_params = jax.tree.map(
+            lambda p, u: p - (lr_t * u.astype(jnp.float32)).astype(p.dtype),
+            params, upd)
+        return new_params, {"mu": mu}
+
+    return Optimizer(init, update)
+
+
+def _adam_core(lr, b1, b2, eps, weight_decay, state_dtype):
+    lr_fn = lr if callable(lr) else constant_schedule(lr)
+    sdt = jnp.dtype(state_dtype)
+
+    def init(params):
+        zeros = lambda p: jnp.zeros(p.shape, sdt)
+        return {"m": jax.tree.map(zeros, params),
+                "v": jax.tree.map(zeros, params)}
+
+    def update(grads, state, params, step):
+        lr_t = lr_fn(step)
+        c1 = 1 - b1 ** (step.astype(jnp.float32) + 1)
+        c2 = 1 - b2 ** (step.astype(jnp.float32) + 1)
+
+        def upd(p, g, m, v):
+            g32 = g.astype(jnp.float32)
+            m_new = b1 * m.astype(jnp.float32) + (1 - b1) * g32
+            v_new = b2 * v.astype(jnp.float32) + (1 - b2) * jnp.square(g32)
+            mhat = m_new / c1
+            vhat = v_new / c2
+            delta = mhat / (jnp.sqrt(vhat) + eps)
+            if weight_decay:
+                delta = delta + weight_decay * p.astype(jnp.float32)
+            p_new = p.astype(jnp.float32) - lr_t * delta
+            return p_new.astype(p.dtype), m_new.astype(sdt), v_new.astype(sdt)
+
+        flat_p, tdef = jax.tree.flatten(params)
+        flat_g = tdef.flatten_up_to(grads)
+        flat_m = tdef.flatten_up_to(state["m"])
+        flat_v = tdef.flatten_up_to(state["v"])
+        out = [upd(p, g, m, v) for p, g, m, v
+               in zip(flat_p, flat_g, flat_m, flat_v)]
+        new_params = tdef.unflatten([o[0] for o in out])
+        new_state = {"m": tdef.unflatten([o[1] for o in out]),
+                     "v": tdef.unflatten([o[2] for o in out])}
+        return new_params, new_state
+
+    return Optimizer(init, update)
+
+
+def adam(lr, b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8,
+         state_dtype="float32"):
+    return _adam_core(lr, b1, b2, eps, 0.0, state_dtype)
+
+
+def adamw(lr, b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
+          weight_decay: float = 0.1, state_dtype="float32"):
+    return _adam_core(lr, b1, b2, eps, weight_decay, state_dtype)

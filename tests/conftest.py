@@ -1,0 +1,16 @@
+"""Shared fixtures.  NOTE: no XLA_FLAGS here — tests must see the real
+single CPU device; only launch/dryrun.py forces 512 placeholder devices
+(in a subprocess for the dry-run tests)."""
+
+import os
+import sys
+
+import numpy as np
+import pytest
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)

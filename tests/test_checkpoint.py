@@ -1,0 +1,43 @@
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import Checkpointer, load_pytree, save_pytree
+
+
+def _tree():
+    return {"params": {"layer": [jnp.arange(4.0), jnp.ones((2, 3))],
+                       "scale": jnp.float32(2.0)},
+            "step": jnp.int32(7),
+            "nested": {"t": (jnp.zeros(2), jnp.ones(1))},
+            "maybe": None}
+
+
+def test_roundtrip_preserves_structure_and_values(tmp_path):
+    tree = _tree()
+    path = str(tmp_path / "ckpt.npz")
+    save_pytree(path, tree)
+    back = load_pytree(path, template=tree)
+    assert jax.tree.structure(back) == jax.tree.structure(tree)
+    for a, b in zip(jax.tree.leaves(back), jax.tree.leaves(tree)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_checkpointer_retention_and_latest(tmp_path):
+    ck = Checkpointer(str(tmp_path), keep=2)
+    for step in (1, 5, 9):
+        ck.save(step, {"w": jnp.full((2,), float(step))},
+                {"note": f"s{step}"})
+    assert ck.steps() == [5, 9]                     # keep=2 retention
+    tree, step, meta = ck.restore(template={"w": jnp.zeros(2)})
+    assert step == 9 and meta["note"] == "s9"
+    np.testing.assert_allclose(np.asarray(tree["w"]), 9.0)
+
+
+def test_restore_specific_step(tmp_path):
+    ck = Checkpointer(str(tmp_path), keep=5)
+    ck.save(1, {"w": jnp.ones(1)})
+    ck.save(2, {"w": jnp.ones(1) * 2})
+    tree, step, _ = ck.restore(step=1)
+    assert step == 1
+    np.testing.assert_allclose(np.asarray(tree["w"]), 1.0)

@@ -1,0 +1,101 @@
+"""Launch layer: server loop, batch specs, cache pspec rules,
+microbatch clamping."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import get_config, SHAPES
+from repro.configs.base import ShapeConfig
+from repro.launch.serve import Request, Server
+from repro.launch.steps import (batch_specs, cache_pspecs, cache_specs,
+                                decode_window, num_microbatches)
+
+
+class FakeMesh:
+    axis_names = ("data", "model")
+    shape = {"data": 16, "model": 16}
+    size = 256
+
+
+def test_batch_specs_shapes():
+    cfg = get_config("qwen3-14b")
+    b = batch_specs(cfg, SHAPES["train_4k"])
+    assert b["tokens"].shape == (256, 4096)
+    vlm = get_config("internvl2-26b")
+    b = batch_specs(vlm, SHAPES["train_4k"])
+    assert b["tokens"].shape == (256, 4096 - 256)
+    assert b["prefix_embeds"].shape == (256, 256, 6144)
+    enc = get_config("seamless-m4t-medium")
+    b = batch_specs(enc, SHAPES["prefill_32k"])
+    assert b["src_embeds"].shape == (32, 32768, 1024)
+
+
+def test_cache_pspecs_rules():
+    cfg = get_config("qwen3-14b")
+    cache = cache_specs(cfg, 128, 32768)          # decode_32k
+    specs = cache_pspecs(cache, FakeMesh(), 128)
+    leaf_spec = specs[0]["blocks"][0]["k"]
+    # batch over (data), seq over model (flash-decode layout)
+    assert leaf_spec == P(None, ("data",), "model", None, None)
+
+    cache1 = cache_specs(cfg, 1, 524288)          # long_500k
+    specs1 = cache_pspecs(cache1, FakeMesh(), 1)
+    leaf1 = specs1[0]["blocks"][0]["k"]
+    assert leaf1 == P(None, None, ("data", "model"), None, None)
+
+
+def test_cache_pspecs_ssm_heads_on_model():
+    cfg = get_config("mamba2-2.7b")
+    cache = cache_specs(cfg, 128, 32768)
+    specs = cache_pspecs(cache, FakeMesh(), 128)
+    ssm_spec = specs[0]["blocks"][0]["ssm"]
+    assert ssm_spec == P(None, ("data",), "model", None, None)
+
+
+def test_num_microbatches_respects_dp():
+    cfg = get_config("deepseek-v3-671b")
+    shape = SHAPES["train_4k"]
+    g16 = num_microbatches(cfg, shape, dp=16)
+    g32 = num_microbatches(cfg, shape, dp=32)
+    assert shape.global_batch % (g16 * 16) == 0
+    assert shape.global_batch % (g32 * 32) == 0
+    assert g32 <= g16
+
+
+def test_decode_window_policy():
+    assert decode_window(get_config("qwen3-14b"), SHAPES["long_500k"]) \
+        == 8192
+    assert decode_window(get_config("qwen3-14b"), SHAPES["decode_32k"]) \
+        is None
+    # SSM/hybrid handle long context natively — no window
+    assert decode_window(get_config("mamba2-2.7b"), SHAPES["long_500k"]) \
+        is None
+    assert decode_window(get_config("jamba-v0.1-52b"), SHAPES["long_500k"]) \
+        is None
+
+
+def test_server_greedy_deterministic():
+    cfg = get_config("qwen2-7b").reduced()
+    server = Server(cfg, batch=2, max_seq=24, temperature=0.0, seed=0)
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(0, cfg.vocab_size, 8).astype(np.int32)
+               for _ in range(2)]
+    reqs1 = server.serve_batch([Request(i, p, 4)
+                                for i, p in enumerate(prompts)])
+    reqs2 = server.serve_batch([Request(i, p, 4)
+                                for i, p in enumerate(prompts)])
+    assert [r.generated for r in reqs1] == [r.generated for r in reqs2]
+    assert all(len(r.generated) == 4 for r in reqs1)
+
+
+def test_server_pads_partial_batches():
+    cfg = get_config("qwen2-7b").reduced()
+    server = Server(cfg, batch=4, max_seq=16, seed=0)
+    rng = np.random.default_rng(0)
+    reqs = server.serve_batch(
+        [Request(7, rng.integers(0, cfg.vocab_size, 6).astype(np.int32), 3)])
+    assert len(reqs) == 1 and reqs[0].uid == 7
+    assert len(reqs[0].generated) == 3

@@ -1,0 +1,66 @@
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models import layers as L
+
+
+KEY = jax.random.PRNGKey(0)
+
+
+def test_dense_shapes_and_bias():
+    p = L.dense_init(KEY, 8, 16, bias=True, dtype="float32")
+    x = jax.random.normal(KEY, (3, 8))
+    y = L.dense(p, x)
+    assert y.shape == (3, 16)
+    assert np.allclose(y, x @ p["w"] + p["b"], atol=1e-6)
+
+
+def test_rmsnorm_unit_scale_gives_unit_rms():
+    p = L.rmsnorm_init(32, dtype="float32")
+    x = jax.random.normal(KEY, (4, 32)) * 7.0
+    y = L.rmsnorm(p, x)
+    rms = jnp.sqrt(jnp.mean(y * y, axis=-1))
+    assert np.allclose(rms, 1.0, atol=1e-3)
+
+
+def test_layernorm_zero_mean_unit_var():
+    p = L.layernorm_init(64, dtype="float32")
+    x = jax.random.normal(KEY, (4, 64)) * 3 + 5
+    y = L.layernorm(p, x)
+    assert np.allclose(jnp.mean(y, -1), 0.0, atol=1e-4)
+    assert np.allclose(jnp.var(y, -1), 1.0, atol=1e-2)
+
+
+def test_rope_preserves_norm_and_is_relative():
+    x = jax.random.normal(KEY, (1, 6, 2, 16))
+    pos = jnp.arange(6)
+    y = L.apply_rope(x, pos)
+    assert np.allclose(jnp.linalg.norm(y, axis=-1),
+                       jnp.linalg.norm(x, axis=-1), atol=1e-4)
+    # relative property: <rope(q,i), rope(k,j)> depends only on i-j
+    q = jax.random.normal(KEY, (1, 1, 1, 16))
+    k = jax.random.normal(jax.random.fold_in(KEY, 1), (1, 1, 1, 16))
+    def dot(i, j):
+        qi = L.apply_rope(q, jnp.array([i]))
+        kj = L.apply_rope(k, jnp.array([j]))
+        return float(jnp.sum(qi * kj))
+    assert abs(dot(3, 5) - dot(10, 12)) < 1e-4
+
+
+@pytest.mark.parametrize("act", ["swiglu", "geglu", "gelu", "relu"])
+def test_mlp_acts(act):
+    p = L.mlp_init(KEY, 16, 32, act=act, dtype="float32")
+    y = L.mlp(p, jax.random.normal(KEY, (2, 16)), act=act)
+    assert y.shape == (2, 16)
+    assert not np.isnan(np.asarray(y)).any()
+
+
+def test_embed_unembed_tied():
+    p = L.embed_init(KEY, 100, 16, dtype="float32")
+    toks = jnp.array([[1, 5, 99]])
+    e = L.embed(p, toks)
+    assert e.shape == (1, 3, 16)
+    logits = L.unembed(p, e)
+    assert logits.shape == (1, 3, 100)

@@ -1,0 +1,106 @@
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import ModelConfig
+from repro.models import moe as MOE
+from repro.models import layers as L
+
+KEY = jax.random.PRNGKey(0)
+
+
+def mk_cfg(**kw):
+    base = dict(name="t", arch_type="moe", num_layers=1, d_model=16,
+                num_heads=2, num_kv_heads=2, head_dim=8, d_ff=32,
+                vocab_size=64, num_experts=4, experts_per_token=2,
+                moe_d_ff=32, param_dtype="float32", compute_dtype="float32")
+    base.update(kw)
+    return ModelConfig(**base)
+
+
+def test_moe_shapes_and_finite():
+    cfg = mk_cfg()
+    p = MOE.moe_init(KEY, cfg)
+    x = jax.random.normal(KEY, (2, 8, 16))
+    out, metrics = MOE.moe_apply(p, x, cfg)
+    assert out.shape == x.shape
+    assert np.isfinite(np.asarray(out)).all()
+    assert metrics["moe_aux_loss"] > 0
+
+
+def test_small_batch_is_lossless():
+    """Below the lossless threshold no token may be dropped."""
+    cfg = mk_cfg()
+    p = MOE.moe_init(KEY, cfg)
+    x = jax.random.normal(KEY, (4, 16, 16))
+    _, metrics = MOE.moe_apply(p, x, cfg)
+    assert float(metrics["moe_dropped_frac"]) == 0.0
+
+
+def test_top1_matches_manual_dense_computation():
+    """With top-1 routing and no drops, the MoE output must equal running
+    each token through its argmax expert scaled by prob 1.0."""
+    cfg = mk_cfg(experts_per_token=1, num_shared_experts=0)
+    p = MOE.moe_init(KEY, cfg)
+    x = jax.random.normal(KEY, (1, 8, 16))
+    out, _ = MOE.moe_apply(p, x, cfg)
+
+    xf = x.reshape(-1, 16)
+    logits = xf @ p["router"]["w"]
+    assign = np.asarray(jnp.argmax(logits, axis=-1))
+    we = p["experts"]
+    ref = np.zeros_like(np.asarray(xf))
+    for t, e in enumerate(assign):
+        h = np.asarray(jax.nn.silu(xf[t] @ we["gate"][e])) \
+            * np.asarray(xf[t] @ we["up"][e])
+        ref[t] = h @ np.asarray(we["down"][e])
+    np.testing.assert_allclose(np.asarray(out.reshape(-1, 16)), ref,
+                               atol=1e-4)
+
+
+def test_shared_expert_added():
+    cfg = mk_cfg(num_shared_experts=1)
+    p = MOE.moe_init(KEY, cfg)
+    x = jax.random.normal(KEY, (1, 8, 16))
+    out_with, _ = MOE.moe_apply(p, x, cfg)
+    p2 = dict(p)
+    p2.pop("shared")
+    cfg2 = mk_cfg(num_shared_experts=0)
+    out_without, _ = MOE.moe_apply(p2, x, cfg2)
+    shared = L.mlp(p["shared"], x.reshape(-1, 16), act=cfg.mlp_act)
+    np.testing.assert_allclose(np.asarray(out_with),
+                               np.asarray(out_without)
+                               + np.asarray(shared).reshape(1, 8, 16),
+                               atol=1e-5)
+
+
+def test_capacity_drops_when_forced():
+    """A skewed router (all tokens -> one expert) with a large batch must
+    drop tokens at capacity."""
+    cfg = mk_cfg(capacity_factor=1.0)
+    p = MOE.moe_init(KEY, cfg)
+    # bias router to a single expert
+    w = np.zeros((16, 4), np.float32)
+    w[:, 0] = 10.0
+    p["router"]["w"] = jnp.asarray(w)
+    x = jax.random.normal(KEY, (8, 512, 16))       # 4096 tokens x k=2 > 4096
+    _, metrics = MOE.moe_apply(p, x, cfg)
+    # expert 0 receives 4096 assignments but capacity = T*k*cf/E = 2048,
+    # so exactly (4096-2048)/8192 = 25% of assignments drop.
+    assert float(metrics["moe_dropped_frac"]) == pytest.approx(0.25,
+                                                               abs=0.03)
+
+
+def test_aux_loss_prefers_balance():
+    cfg = mk_cfg()
+    p = MOE.moe_init(KEY, cfg)
+    x = jax.random.normal(KEY, (2, 32, 16))
+    _, m_balanced = MOE.moe_apply(p, x, cfg)
+    w = np.zeros((16, 4), np.float32)
+    w[:, 1] = 10.0
+    p["router"]["w"] = jnp.asarray(w)
+    _, m_skewed = MOE.moe_apply(p, x, cfg)
+    assert float(m_skewed["moe_aux_loss"]) > float(m_balanced["moe_aux_loss"])

@@ -1,0 +1,55 @@
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.optim import (adam, adamw, sgd, clip_by_global_norm,
+                         cosine_schedule, linear_warmup_cosine)
+
+
+def quad_loss(params):
+    return jnp.sum((params["x"] - 3.0) ** 2) + jnp.sum((params["y"] + 1) ** 2)
+
+
+@pytest.mark.parametrize("make_opt", [
+    lambda: sgd(0.1), lambda: sgd(0.05, momentum=0.9),
+    lambda: adam(0.1), lambda: adamw(0.1, weight_decay=0.0)])
+def test_optimizers_converge_on_quadratic(make_opt):
+    opt = make_opt()
+    params = {"x": jnp.zeros(3), "y": jnp.ones(2)}
+    state = opt.init(params)
+    for step in range(200):
+        grads = jax.grad(quad_loss)(params)
+        params, state = opt.update(grads, state, params, jnp.int32(step))
+    assert float(quad_loss(params)) < 1e-2
+
+
+def test_adam_bf16_state_dtype():
+    opt = adam(0.1, state_dtype="bfloat16")
+    params = {"x": jnp.zeros(4)}
+    state = opt.init(params)
+    assert state["m"]["x"].dtype == jnp.bfloat16
+    grads = {"x": jnp.ones(4)}
+    params, state = opt.update(grads, state, params, jnp.int32(0))
+    assert np.isfinite(np.asarray(params["x"])).all()
+
+
+def test_clip_by_global_norm():
+    grads = {"a": jnp.ones(4) * 10}
+    clipped, norm = clip_by_global_norm(grads, 1.0)
+    assert float(norm) == pytest.approx(20.0)
+    total = jnp.sqrt(jnp.sum(clipped["a"] ** 2))
+    assert float(total) == pytest.approx(1.0, rel=1e-3)
+    # below threshold: untouched
+    small = {"a": jnp.ones(4) * 0.1}
+    out, _ = clip_by_global_norm(small, 1.0)
+    np.testing.assert_allclose(np.asarray(out["a"]), 0.1, rtol=1e-5)
+
+
+def test_schedules():
+    cos = cosine_schedule(1.0, 100)
+    assert float(cos(0)) == pytest.approx(1.0)
+    assert float(cos(100)) == pytest.approx(0.1, abs=1e-3)
+    warm = linear_warmup_cosine(1.0, 10, 110)
+    assert float(warm(0)) < float(warm(9)) <= 1.0
+    assert float(warm(9)) == pytest.approx(1.0)

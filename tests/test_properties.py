@@ -1,0 +1,106 @@
+"""Property-based tests (hypothesis) on system invariants."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.kmeans import kmeans, pairwise_sq_dists
+from repro.core.spectral import affinity_matrix, normalized_laplacian
+from repro.fed.partition import partition_non_iid
+from repro.fed.server import fedavg_aggregate
+from repro.models import layers as L
+
+KEY = jax.random.PRNGKey(0)
+_settings = settings(max_examples=20, deadline=None)
+
+
+@_settings
+@given(st.integers(4, 40), st.integers(1, 8), st.integers(0, 2 ** 31 - 1))
+def test_pairwise_dists_nonneg_symmetric_zero_diag(n, d, seed):
+    x = jax.random.normal(jax.random.PRNGKey(seed), (n, d))
+    dm = np.asarray(pairwise_sq_dists(x, x))
+    assert (dm >= 0).all()
+    np.testing.assert_allclose(dm, dm.T, atol=1e-4)
+    assert np.abs(np.diag(dm)).max() < 1e-3
+
+
+@_settings
+@given(st.integers(6, 30), st.integers(2, 4), st.integers(0, 2 ** 31 - 1))
+def test_kmeans_assignments_valid_and_exhaustive(n, k, seed):
+    x = jax.random.normal(jax.random.PRNGKey(seed), (n, 3)) * 3
+    assign, centers = kmeans(jax.random.PRNGKey(seed + 1), x, k)
+    assign = np.asarray(assign)
+    assert assign.min() >= 0 and assign.max() < k
+    assert centers.shape == (k, 3)
+    assert np.isfinite(np.asarray(centers)).all()
+
+
+@_settings
+@given(st.integers(5, 25), st.integers(0, 2 ** 31 - 1))
+def test_laplacian_row_property(n, seed):
+    x = jax.random.normal(jax.random.PRNGKey(seed), (n, 2))
+    a = affinity_matrix(x, gamma=0.5)
+    lap = np.asarray(normalized_laplacian(a))
+    evals = np.linalg.eigvalsh(lap)
+    assert evals.min() > -1e-4
+    assert evals.max() < 2.0 + 1e-4            # normalized Laplacian bound
+
+
+@_settings
+@given(st.integers(2, 6), st.integers(0, 2 ** 31 - 1))
+def test_fedavg_is_convex_combination(k, seed):
+    rng = np.random.default_rng(seed)
+    stacked = {"w": jnp.asarray(rng.normal(size=(k, 4)).astype(np.float32))}
+    weights = jnp.asarray(rng.uniform(0.1, 1.0, k).astype(np.float32))
+    out = np.asarray(fedavg_aggregate(stacked, weights)["w"])
+    lo = np.asarray(stacked["w"]).min(axis=0) - 1e-5
+    hi = np.asarray(stacked["w"]).max(axis=0) + 1e-5
+    assert (out >= lo).all() and (out <= hi).all()
+
+
+@_settings
+@given(st.integers(2, 30), st.sampled_from([0.0, 0.5, 0.8, 1.0]),
+       st.integers(0, 1000))
+def test_partition_is_a_partition(num_clients, sigma, seed):
+    y = np.random.default_rng(seed).integers(0, 10, 600).astype(np.int32)
+    shards = partition_non_iid(y, num_clients, sigma, seed=seed,
+                               min_per_client=1)
+    assert len(shards) == num_clients
+    all_idx = np.concatenate(shards)
+    assert all_idx.min() >= 0 and all_idx.max() < len(y)
+    # every sample assigned at least once (min-size top-up may duplicate)
+    assert len(np.unique(all_idx)) >= len(y) * 0.99
+
+
+@_settings
+@given(st.integers(1, 64), st.integers(0, 2 ** 31 - 1))
+def test_rope_is_orthogonal_transform(seq, seed):
+    x = jax.random.normal(jax.random.PRNGKey(seed), (1, seq, 1, 16))
+    y = L.apply_rope(x, jnp.arange(seq))
+    np.testing.assert_allclose(np.asarray(jnp.linalg.norm(y, axis=-1)),
+                               np.asarray(jnp.linalg.norm(x, axis=-1)),
+                               atol=1e-4)
+
+
+@_settings
+@given(st.floats(0.1, 10.0), st.integers(0, 2 ** 31 - 1))
+def test_rmsnorm_scale_invariance(scale, seed):
+    p = L.rmsnorm_init(16, dtype="float32")
+    x = jax.random.normal(jax.random.PRNGKey(seed), (3, 16))
+    y1 = np.asarray(L.rmsnorm(p, x))
+    y2 = np.asarray(L.rmsnorm(p, x * scale))
+    np.testing.assert_allclose(y1, y2, atol=1e-3)
+
+
+@_settings
+@given(st.integers(1, 8), st.integers(1, 16), st.integers(0, 2 ** 31 - 1))
+def test_softmax_attention_rows_are_distributions(heads, seq, seed):
+    from repro.kernels.ref import attention_ref
+    k = jax.random.PRNGKey(seed)
+    q = jax.random.normal(k, (1, seq, heads, 8))
+    kk = jax.random.normal(jax.random.fold_in(k, 1), (1, seq, heads, 8))
+    v = jnp.ones((1, seq, heads, 8))
+    out = attention_ref(q, kk, v, causal=True)
+    # with constant V, any valid attention average returns exactly V
+    np.testing.assert_allclose(np.asarray(out), 1.0, atol=1e-4)

@@ -1,0 +1,75 @@
+"""Selection policies: contract + behavioural checks."""
+
+import numpy as np
+import pytest
+
+from repro.core import RoundState, Feedback, favor_reward, make_policy
+
+N, K, DIM = 30, 6, 4
+
+
+def mk_state(seed=0, round_idx=0):
+    rng = np.random.default_rng(seed)
+    # two well-separated client groups in embedding space
+    embeds = np.concatenate([rng.normal(size=(N // 2, DIM)) - 4,
+                             rng.normal(size=(N // 2, DIM)) + 4]).astype(
+                                 np.float32)
+    return RoundState(round_idx, embeds, np.zeros(DIM, np.float32), 0.1)
+
+
+@pytest.mark.parametrize("name", ["fedavg", "kcenter", "favor", "dqre_sc"])
+def test_policy_contract(name):
+    kw = {"num_clusters": 4} if name == "dqre_sc" else {}
+    pol = make_policy(name, N, K, DIM, seed=0, **kw)
+    state = mk_state()
+    sel = pol.select(state)
+    assert len(sel) == K
+    assert len(set(sel.tolist())) == K                 # unique
+    assert all(0 <= c < N for c in sel)
+    # update must not crash
+    pol.update(state, mk_state(1, 1), Feedback(0.5, favor_reward(0.5, 0.8),
+                                               sel))
+
+
+def test_kcenter_spreads_across_groups():
+    pol = make_policy("kcenter", N, K, DIM, seed=0)
+    sel = pol.select(mk_state())
+    groups = (sel >= N // 2).astype(int)
+    assert 0 < groups.sum() < K                        # both groups hit
+
+
+def test_fedavg_uniform_coverage():
+    pol = make_policy("fedavg", N, K, DIM, seed=0)
+    counts = np.zeros(N)
+    for _ in range(200):
+        counts[pol.select(mk_state())] += 1
+    # no client starved, no client dominating
+    assert counts.min() > 0
+    assert counts.max() / counts.sum() < 0.10
+
+
+def test_dqre_sc_uses_all_clusters_under_exploration():
+    pol = make_policy("dqre_sc", N, K, DIM, seed=0, num_clusters=2)
+    seen = set()
+    for r in range(10):
+        sel = pol.select(mk_state(seed=r, round_idx=r))
+        seen.update((sel >= N // 2).astype(int).tolist())
+        pol.update(mk_state(seed=r), mk_state(seed=r + 1),
+                   Feedback(0.3, -0.5, sel))
+    assert seen == {0, 1}
+
+
+def test_dqre_sc_auto_k_contract():
+    """Eigengap auto-k (paper §3.4): still returns a valid unique cohort."""
+    pol = make_policy("dqre_sc", N, K, DIM, seed=0, num_clusters=6,
+                      auto_k=True)
+    sel = pol.select(mk_state())
+    assert len(set(sel.tolist())) == K
+    pol.update(mk_state(), mk_state(1, 1), Feedback(0.4, -0.6, sel))
+
+
+def test_favor_reward_shaping():
+    assert favor_reward(0.8, 0.8) == pytest.approx(0.0)
+    assert favor_reward(0.9, 0.8) > 0
+    assert favor_reward(0.5, 0.8) < 0
+    assert favor_reward(0.9, 0.8) < 64 ** 0.1          # bounded

@@ -1,0 +1,75 @@
+"""Spectral clustering (Algorithm I) — structural and behavioural tests."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (affinity_matrix, eigengap_k, kmeans,
+                        normalized_laplacian, spectral_cluster,
+                        spectral_embedding)
+
+KEY = jax.random.PRNGKey(0)
+
+
+def two_blobs(n=40, sep=8.0, seed=0):
+    rng = np.random.default_rng(seed)
+    a = rng.normal(size=(n // 2, 2)) + [0, 0]
+    b = rng.normal(size=(n // 2, 2)) + [sep, sep]
+    x = np.concatenate([a, b]).astype(np.float32)
+    labels = np.array([0] * (n // 2) + [1] * (n // 2))
+    return x, labels
+
+
+def test_affinity_properties():
+    x = jnp.asarray(two_blobs()[0])
+    a = affinity_matrix(x, gamma=0.5)
+    a = np.asarray(a)
+    assert np.allclose(a, a.T, atol=1e-6)          # symmetric
+    assert np.all(a >= 0) and np.all(a <= 1)       # RBF range
+    assert np.allclose(np.diag(a), 0)              # zero diagonal
+
+
+def test_laplacian_psd_with_zero_eigenvalue():
+    x = jnp.asarray(two_blobs()[0])
+    lap = normalized_laplacian(affinity_matrix(x, gamma=0.5))
+    evals = np.linalg.eigvalsh(np.asarray(lap))
+    assert evals.min() > -1e-5                     # PSD
+    assert evals.min() < 1e-3                      # ~0 smallest eigenvalue
+
+
+def test_spectral_embedding_rows_unit_norm():
+    x = jnp.asarray(two_blobs()[0])
+    y, _ = spectral_embedding(affinity_matrix(x, gamma=0.5), 2)
+    norms = np.linalg.norm(np.asarray(y), axis=1)
+    assert np.allclose(norms, 1.0, atol=1e-4)
+
+
+def test_spectral_cluster_separates_blobs():
+    x, labels = two_blobs()
+    assign, _, _ = spectral_cluster(KEY, jnp.asarray(x), 2)
+    assign = np.asarray(assign)
+    # clustering is label-invariant: check purity
+    purity = max(np.mean(assign == labels), np.mean(assign == 1 - labels))
+    assert purity > 0.95
+
+
+def test_eigengap_detects_two_clusters():
+    x, _ = two_blobs(sep=12.0)
+    a = affinity_matrix(jnp.asarray(x), gamma=0.5)
+    _, evals = spectral_embedding(a, 2)
+    assert int(eigengap_k(evals)) == 2
+
+
+def test_kmeans_assigns_to_nearest_center():
+    x, _ = two_blobs()
+    assign, centers = kmeans(KEY, jnp.asarray(x), 2)
+    d = np.linalg.norm(x[:, None] - np.asarray(centers)[None], axis=-1)
+    np.testing.assert_array_equal(np.asarray(assign), d.argmin(axis=1))
+
+
+def test_pallas_affinity_agrees_inside_spectral_path():
+    x = jnp.asarray(two_blobs()[0])
+    a_jnp = affinity_matrix(x, gamma=0.5, use_pallas=False)
+    a_pal = affinity_matrix(x, gamma=0.5, use_pallas=True)
+    np.testing.assert_allclose(np.asarray(a_jnp), np.asarray(a_pal),
+                               atol=5e-5)
