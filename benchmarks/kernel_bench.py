@@ -21,6 +21,37 @@ def _time(fn, *args, iters=5):
     return (time.time() - t0) / iters * 1e6
 
 
+def _bench_spectral_selection(csv_rows, key):
+    """Dense Algorithm I vs the Nyström landmark path.
+
+    At n = 4096 the dense path pays O(n²d) affinity + O(n³) eigh; the
+    Nyström path with m = n/8 landmarks is O(n·m·d + m³) and should be
+    >= 10x faster wall-clock.  The 100k row demonstrates the cohort scale
+    the dense path cannot reach at all (10¹⁰-entry affinity matrix).
+    """
+    from repro.core.spectral import spectral_cluster
+
+    n, d, k, m = 4096, 8, 8, 512
+    x = jax.random.normal(key, (n, d), jnp.float32) * 4.0
+
+    us_dense = _time(
+        lambda a: spectral_cluster(key, a, k, method="dense"), x, iters=1)
+    us_nys = _time(
+        lambda a: spectral_cluster(key, a, k, method="nystrom",
+                                   num_landmarks=m), x, iters=1)
+    csv_rows.append((f"spectral/dense/n{n}", us_dense, ""))
+    csv_rows.append((f"spectral/nystrom_m{m}/n{n}", us_nys,
+                     f"speedup={us_dense / us_nys:.1f}x"))
+
+    n_big = 100_000
+    xb = jax.random.normal(jax.random.fold_in(key, 7), (n_big, d)) * 4.0
+    us_big = _time(
+        lambda a: spectral_cluster(key, a, k, method="nystrom",
+                                   num_landmarks=m), xb, iters=1)
+    csv_rows.append((f"spectral/nystrom_m{m}/n{n_big}", us_big,
+                     f"clients_per_sec={n_big / (us_big / 1e6):.0f}"))
+
+
 def run(csv_rows: list) -> None:
     key = jax.random.PRNGKey(0)
     on_tpu = jax.default_backend() == "tpu"
@@ -34,6 +65,12 @@ def run(csv_rows: list) -> None:
         if on_tpu:
             us_k = _time(lambda a, b: ops.pairwise_sq_dists(a, b), x, x)
             csv_rows.append((f"kernel/pairwise_pallas/n{n}", us_k, ""))
+            z = x[:n // 8]
+            us_c = _time(lambda a, b: ops.rbf_cross_affinity(a, b, 0.5),
+                         x, z)
+            csv_rows.append((f"kernel/cross_rbf_pallas/n{n}", us_c, ""))
+
+    _bench_spectral_selection(csv_rows, key)
 
     # flash attention jnp-blocked vs naive at growing S
     from repro.models.attention import blocked_attention

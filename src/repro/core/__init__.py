@@ -5,7 +5,9 @@ networks), weight embeddings, and the four selection policies (FedAvg /
 K-Center / FAVOR baselines + DQRE-SCnet).
 """
 
-from repro.core.spectral import (affinity_matrix, normalized_laplacian,
+from repro.core.spectral import (affinity_matrix, auto_gamma, cross_affinity,
+                                 normalized_laplacian,
+                                 nystrom_spectral_embedding,
                                  spectral_embedding, spectral_cluster,
                                  eigengap_k)
 from repro.core.kmeans import kmeans, pairwise_sq_dists
@@ -17,8 +19,10 @@ from repro.core.selection import (POLICIES, make_policy, favor_reward,
                                   FavorSelection, DQREScSelection)
 
 __all__ = [
-    "affinity_matrix", "normalized_laplacian", "spectral_embedding",
-    "spectral_cluster", "eigengap_k", "kmeans", "pairwise_sq_dists",
+    "affinity_matrix", "auto_gamma", "cross_affinity",
+    "normalized_laplacian", "nystrom_spectral_embedding",
+    "spectral_embedding", "spectral_cluster", "eigengap_k", "kmeans",
+    "pairwise_sq_dists",
     "DQNAgent", "DQNConfig", "qnet_init", "qnet_apply",
     "WeightEmbedder", "flatten_pytree", "pca_embed",
     "POLICIES", "make_policy", "favor_reward", "RoundState", "Feedback",

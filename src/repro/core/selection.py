@@ -131,7 +131,8 @@ class DQREScSelection(SelectionPolicy):
 
     def __init__(self, num_clients, clients_per_round, embed_dim, seed=0,
                  num_clusters: int = 8, use_pallas: bool = False,
-                 auto_k: bool = False,
+                 auto_k: bool = False, approx_method: str = "dense",
+                 num_landmarks: Optional[int] = None,
                  dqn_overrides: Optional[dict] = None):
         super().__init__(num_clients, clients_per_round, embed_dim, seed)
         self.num_clusters = num_clusters
@@ -140,6 +141,10 @@ class DQREScSelection(SelectionPolicy):
         # by num_clusters (the DQN action space stays fixed; clusters
         # beyond k_hat are simply empty that round).
         self.auto_k = auto_k
+        # Algorithm I scale regime: "dense" is the exact O(N²)/O(N³) path,
+        # "nystrom" the landmark approximation viable at N ~ 10⁵ clients.
+        self.approx_method = approx_method
+        self.num_landmarks = num_landmarks
         cfg = DQNConfig(state_dim=(num_clusters + 1) * embed_dim,
                         num_actions=num_clusters,
                         **(dqn_overrides or {}))
@@ -148,24 +153,58 @@ class DQREScSelection(SelectionPolicy):
         self._last_assign: Optional[np.ndarray] = None
         self._last_state_vec: Optional[np.ndarray] = None
         self._last_actions: Optional[list] = None
+        # select() and update() see the same embeddings once per round —
+        # cache the assignment by content fingerprint so Algorithm I runs
+        # once, not twice, per round.
+        self._assign_cache: Optional[tuple] = None   # (fingerprint, assign)
+        self.cluster_computes = 0
 
     # -- Algorithm I: cluster the client embeddings -------------------------
+    @staticmethod
+    def _fingerprint(embeds: np.ndarray) -> bytes:
+        import hashlib
+        h = hashlib.sha1(np.ascontiguousarray(embeds).tobytes())
+        h.update(str(embeds.shape).encode())
+        return h.digest()
+
     def _cluster(self, embeds: np.ndarray):
+        embeds = np.asarray(embeds, np.float32)
+        fp = self._fingerprint(embeds)
+        if self._assign_cache is not None and self._assign_cache[0] == fp:
+            return self._assign_cache[1]
         self._key, sub = jax.random.split(self._key)
         k = self.num_clusters
         if self.auto_k:
-            from repro.core.spectral import (affinity_matrix, eigengap_k,
+            from repro.core.spectral import (affinity_matrix,
+                                             default_num_landmarks,
+                                             eigengap_k,
+                                             nystrom_spectral_embedding,
                                              spectral_embedding)
             import jax.numpy as jnp
-            a = affinity_matrix(jnp.asarray(embeds, np.float32),
-                                use_pallas=self.use_pallas)
-            _, evals = spectral_embedding(a, self.num_clusters)
+            xe = jnp.asarray(embeds)
+            if self.approx_method == "nystrom":
+                # the approximate L_norm spectrum is enough for the
+                # eigengap — never build the dense n×n affinity here, or
+                # auto_k would reintroduce the O(N²)/O(N³) ceiling the
+                # landmark path exists to remove.
+                self._key, lm = jax.random.split(self._key)
+                m = self.num_landmarks or default_num_landmarks(
+                    len(embeds), self.num_clusters)
+                _, evals = nystrom_spectral_embedding(
+                    lm, xe, self.num_clusters, m,
+                    use_pallas=self.use_pallas)
+            else:
+                a = affinity_matrix(xe, use_pallas=self.use_pallas)
+                _, evals = spectral_embedding(a, self.num_clusters)
             k = int(np.clip(int(eigengap_k(evals, self.num_clusters)),
                             2, self.num_clusters))
         assign, _, _ = spectral_cluster(
-            sub, np.asarray(embeds, np.float32), k,
-            use_pallas=self.use_pallas)
-        return np.asarray(assign)
+            sub, embeds, k, use_pallas=self.use_pallas,
+            method=self.approx_method, num_landmarks=self.num_landmarks)
+        assign = np.asarray(assign)
+        self.cluster_computes += 1
+        self._assign_cache = (fp, assign)
+        return assign
 
     def _state_vec(self, state: RoundState, assign: np.ndarray) -> np.ndarray:
         cents = np.zeros((self.num_clusters, self.embed_dim), np.float32)

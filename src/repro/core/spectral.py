@@ -11,10 +11,26 @@ Steps (verbatim from the paper's pseudo-code):
   cluster rows of Y with k-means; assign point i to cluster of row i.
 
 The affinity computation is the O(n²d) hotspot; ``use_pallas=True`` routes
-it through the TPU Pallas kernel (``kernels/affinity_pallas.py``), whose
-jnp oracle is ``kernels/ref.py``.  Eigendecomposition stays in XLA's
-``eigh`` (TPU-native).  Also exposes ``eigengap_k`` — the paper's
-"first large gap" heuristic for choosing the number of clusters.
+it through the TPU Pallas kernels (``kernels/affinity_pallas.py``), whose
+jnp oracles are in ``kernels/ref.py``.
+
+Two scale regimes:
+
+* ``method="dense"`` — the exact path above.  ``solver="eigh"`` is XLA's
+  full eigendecomposition (TPU-native, O(n³)); ``solver="subspace"``
+  replaces it with orthogonal (subspace) iteration on 2I − L_norm, which
+  only costs O(n²k) per sweep and recovers the same smallest-k invariant
+  subspace when k ≪ n.
+* ``method="nystrom"`` — the approximate path for cross-device-FL cohort
+  sizes (N ~ 10⁵): sample m ≪ N landmarks, compute only the (N, m)
+  cross-affinity C and the (m, m) landmark block W, and recover the
+  normalized-Laplacian embedding from the one-shot Nyström extension
+  (Fowlkes et al., 2004):  Â = D̂^{-1/2} C W⁺ Cᵀ D̂^{-1/2} with
+  D̂ = diag(C W⁺ Cᵀ 1).  Everything is O(N·m) memory / O(N m d + m³)
+  compute, so N = 100k clients fits where the dense O(N²) matrix cannot.
+
+Also exposes ``eigengap_k`` — the paper's "first large gap" heuristic for
+choosing the number of clusters.
 """
 
 from __future__ import annotations
@@ -26,6 +42,26 @@ import jax.numpy as jnp
 
 from repro.core.kmeans import kmeans, pairwise_sq_dists
 
+_EPS = 1e-12
+# gamma estimation subsamples the distance matrix beyond this many rows —
+# the median of a few thousand rows is statistically indistinguishable
+# from the full median and avoids sorting 10¹⁰ entries at N = 100k.
+_GAMMA_SAMPLE_ROWS = 4096
+
+
+def auto_gamma(d2):
+    """Median heuristic: gamma = 1 / (2 · median of positive distances).
+
+    Uses ``nanmedian`` over the zero-masked matrix — ``jnp.median`` on a
+    NaN-masked array returns NaN, which used to silently collapse the
+    data-adaptive bandwidth to the 0.5 fallback for *every* input.
+    """
+    if d2.shape[0] > _GAMMA_SAMPLE_ROWS:
+        d2 = d2[:_GAMMA_SAMPLE_ROWS]
+    med = jnp.nanmedian(jnp.where(d2 > 0, d2, jnp.nan))
+    med = jnp.nan_to_num(med, nan=1.0)
+    return 1.0 / jnp.maximum(2.0 * med, _EPS)
+
 
 def affinity_matrix(x, *, gamma: float | None = None, use_pallas: bool = False):
     """RBF affinity A_ij = exp(-gamma ||x_i - x_j||^2), zero diagonal."""
@@ -35,29 +71,141 @@ def affinity_matrix(x, *, gamma: float | None = None, use_pallas: bool = False):
     else:
         d2 = pairwise_sq_dists(x, x)
     if gamma is None:
-        # median heuristic: gamma = 1 / (2 * median(d2))
-        med = jnp.median(jnp.where(d2 > 0, d2, jnp.nan))
-        med = jnp.nan_to_num(med, nan=1.0)
-        gamma = 1.0 / jnp.maximum(2.0 * med, 1e-12)
+        # zero the diagonal first: self-distances are 0 by definition but
+        # the matmul form leaves tiny positive junk that would leak past
+        # auto_gamma's positive-entry mask and bias the median low.
+        eye = jnp.eye(x.shape[0], dtype=d2.dtype)
+        gamma = auto_gamma(d2 * (1.0 - eye))
     a = jnp.exp(-gamma * d2)
     return a * (1.0 - jnp.eye(x.shape[0], dtype=a.dtype))
 
 
+def cross_affinity(x, z, *, gamma, use_pallas: bool = False):
+    """Rectangular RBF affinity exp(-gamma ||x_i - z_j||²), (n, m)."""
+    if use_pallas:
+        from repro.kernels import ops as kops
+        return kops.rbf_cross_affinity(x, z, gamma)
+    return jnp.exp(-gamma * pairwise_sq_dists(x, z))
+
+
 def normalized_laplacian(a):
     d = jnp.sum(a, axis=1)
-    inv_sqrt = jax.lax.rsqrt(jnp.maximum(d, 1e-12))
+    inv_sqrt = jax.lax.rsqrt(jnp.maximum(d, _EPS))
     n = a.shape[0]
     return jnp.eye(n) - a * inv_sqrt[:, None] * inv_sqrt[None, :]
 
 
-def spectral_embedding(a, k: int):
-    """First-k eigenvectors of L_norm (ascending eigenvalues), row-normed."""
-    lap = normalized_laplacian(a)
-    evals, evecs = jnp.linalg.eigh(lap)        # ascending
-    x = evecs[:, :k]
+def _row_normalize(x):
     norms = jnp.linalg.norm(x, axis=1, keepdims=True)
-    y = x / jnp.maximum(norms, 1e-12)
-    return y, evals
+    return x / jnp.maximum(norms, _EPS)
+
+
+def spectral_embedding(a, k: int, *, solver: str = "eigh",
+                       iters: int = 60):
+    """First-k eigenvectors of L_norm (ascending eigenvalues), row-normed.
+
+    ``solver="eigh"`` — exact, O(n³).  ``solver="subspace"`` — orthogonal
+    iteration on 2I − L_norm (eigenvalues of L_norm lie in [0, 2], so its
+    smallest-k subspace is the dominant subspace of the shift), O(n²k·iters),
+    followed by a Rayleigh–Ritz rotation; returns only k eigenvalues.
+    """
+    if solver == "eigh":
+        lap = normalized_laplacian(a)
+        evals, evecs = jnp.linalg.eigh(lap)        # ascending
+        x = evecs[:, :k]
+    elif solver == "subspace":
+        x, evals = _subspace_smallest_k(a, k, iters=iters)
+    else:
+        raise ValueError(f"unknown solver: {solver!r}")
+    return _row_normalize(x), evals
+
+
+def _subspace_smallest_k(a, k: int, *, iters: int = 60):
+    """Smallest-k eigenpairs of L_norm = I − A_norm without full eigh.
+
+    Orthogonal iteration: Q ← qr(B Q) with B = 2I − L_norm = I + A_norm
+    (spd, dominant subspace = smallest-k of L_norm), then a k×k
+    Rayleigh–Ritz solve to rotate Q onto the Ritz vectors and recover the
+    eigenvalues of L_norm itself.
+    """
+    n = a.shape[0]
+    d = jnp.sum(a, axis=1)
+    inv_sqrt = jax.lax.rsqrt(jnp.maximum(d, _EPS))
+    a_norm = a * inv_sqrt[:, None] * inv_sqrt[None, :]
+
+    q0 = jax.random.normal(jax.random.PRNGKey(0), (n, k), a.dtype)
+    q0, _ = jnp.linalg.qr(q0)
+
+    def body(_, q):
+        q, _ = jnp.linalg.qr(q + a_norm @ q)       # B q = q + A_norm q
+        return q
+
+    q = jax.lax.fori_loop(0, iters, body, q0)
+    # Rayleigh-Ritz on L_norm: T = Qᵀ L Q = Qᵀ Q − Qᵀ A_norm Q
+    t = q.T @ (q - a_norm @ q)
+    t = 0.5 * (t + t.T)
+    evals, u = jnp.linalg.eigh(t)                  # ascending
+    return q @ u, evals
+
+
+def nystrom_spectral_embedding(key, x, k: int, num_landmarks: int, *,
+                               gamma: float | None = None,
+                               use_pallas: bool = False):
+    """Approximate normalized-Laplacian embedding via Nyström landmarks.
+
+    Samples m landmarks Z ⊂ x, computes only the (n, m) cross-affinity
+    C = exp(-γ d²(x, Z)) and its landmark block W = C[Z], and extends the
+    m×m eigenproblem to all n points:
+
+        D̂ = diag(C W⁺ Cᵀ 1)                approximate degrees
+        S  = D̂^{-1/2} C                     degree-normalized cross block
+        M  = W^{-1/2} (Sᵀ S) W^{-1/2}       (m, m), symmetric
+        Â  = S W⁺ Sᵀ  has eigenvectors  V = S W^{-1/2} U Λ^{-1/2}
+
+    The top-k eigenpairs of Â are the smallest-k of L_norm = I − Â.
+    Returns (Y row-normalized (n, k), evals of L_norm ascending (m,)).
+    """
+    n = x.shape[0]
+    m = min(int(num_landmarks), n)
+    if m < k:
+        raise ValueError(f"num_landmarks={m} must be >= k={k}")
+    x = x.astype(jnp.float32)
+    idx = jax.random.choice(key, n, (m,), replace=False)
+    z = x[idx]
+    if gamma is None:
+        rows = x[:min(n, _GAMMA_SAMPLE_ROWS)]
+        gamma = auto_gamma(pairwise_sq_dists(rows, z))
+    c = cross_affinity(x, z, gamma=gamma, use_pallas=use_pallas)   # (n, m)
+    w = c[idx]                                                     # (m, m)
+    w = 0.5 * (w + w.T)
+
+    ew, uw = jnp.linalg.eigh(w)
+    # pseudo-inverse powers with eigenvalue clipping: RBF kernel blocks are
+    # PSD in exact arithmetic but near-singular when landmarks cluster.
+    good = ew > 1e-6 * jnp.max(ew)
+    inv = jnp.where(good, 1.0 / jnp.maximum(ew, _EPS), 0.0)
+    inv_sqrt_w = uw * jnp.sqrt(inv)[None, :]        # W^{-1/2} = U Λ^{-1/2}
+    w_isqrt = inv_sqrt_w @ uw.T                     # (m, m)
+
+    # approximate degrees: d̂ = C W⁺ (Cᵀ 1)
+    col = c.T @ jnp.ones((n,), c.dtype)             # (m,)
+    d_hat = c @ (w_isqrt @ (w_isqrt @ col))
+    inv_sqrt_d = jax.lax.rsqrt(jnp.maximum(d_hat, _EPS))
+    s = c * inv_sqrt_d[:, None]                     # (n, m)
+
+    mm = w_isqrt @ (s.T @ s) @ w_isqrt
+    mm = 0.5 * (mm + mm.T)
+    em, um = jnp.linalg.eigh(mm)                    # ascending
+    top = um[:, ::-1][:, :k]                        # largest-k of Â
+    lam = em[::-1][:k]
+    v = (s @ (w_isqrt @ top)) * jax.lax.rsqrt(
+        jnp.maximum(lam, _EPS))[None, :]            # (n, k), ≈ orthonormal
+    evals = 1.0 - em[::-1]                          # L_norm spectrum, asc.
+    return _row_normalize(v), evals
+
+
+def default_num_landmarks(n: int, k: int) -> int:
+    return min(n, max(8 * k, 64))
 
 
 def eigengap_k(evals, max_k: int = 10) -> jnp.ndarray:
@@ -66,11 +214,33 @@ def eigengap_k(evals, max_k: int = 10) -> jnp.ndarray:
     return jnp.argmax(gaps) + 1
 
 
-@functools.partial(jax.jit, static_argnames=("k", "use_pallas"))
+@functools.partial(jax.jit, static_argnames=("k", "use_pallas", "method",
+                                             "num_landmarks", "solver"))
 def spectral_cluster(key, x, k: int, *, gamma: float | None = None,
-                     use_pallas: bool = False):
-    """Full Algorithm I.  x: (n, d) points -> (assignments, Y, evals)."""
-    a = affinity_matrix(x, gamma=gamma, use_pallas=use_pallas)
-    y, evals = spectral_embedding(a, k)
-    assign, _ = kmeans(key, y, k)
+                     use_pallas: bool = False, method: str = "dense",
+                     num_landmarks: int | None = None,
+                     solver: str = "eigh"):
+    """Full Algorithm I.  x: (n, d) points -> (assignments, Y, evals).
+
+    ``method="dense"`` computes the exact n×n affinity (``solver`` picks
+    the eigensolver); ``method="nystrom"`` uses ``num_landmarks`` sampled
+    landmarks (default min(n, max(8k, 64))) and scales to n ~ 10⁵.
+    """
+    km_key, lm_key = jax.random.split(key)
+    if method == "dense":
+        if num_landmarks is not None:
+            raise ValueError("num_landmarks only applies to method='nystrom'")
+        a = affinity_matrix(x, gamma=gamma, use_pallas=use_pallas)
+        y, evals = spectral_embedding(a, k, solver=solver)
+    elif method == "nystrom":
+        if solver != "eigh":
+            raise ValueError("solver only applies to method='dense' "
+                             "(the Nyström eigenproblem is m×m and always "
+                             "uses eigh)")
+        m = num_landmarks or default_num_landmarks(x.shape[0], k)
+        y, evals = nystrom_spectral_embedding(
+            lm_key, x, k, m, gamma=gamma, use_pallas=use_pallas)
+    else:
+        raise ValueError(f"unknown method: {method!r}")
+    assign, _ = kmeans(km_key, y, k)
     return assign, y, evals

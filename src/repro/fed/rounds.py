@@ -54,6 +54,8 @@ class RunnerConfig:
     seed: int = 0
     policy: str = "fedavg"
     use_pallas: bool = False
+    approx_method: str = "dense"           # "dense" | "nystrom" (Algorithm I)
+    num_landmarks: Optional[int] = None    # Nyström landmark count (m ≪ N)
     policy_kwargs: Optional[dict] = None
 
 
@@ -85,6 +87,8 @@ class FederatedRunner:
         if cfg.policy == "dqre_sc":
             kw.setdefault("num_clusters", cfg.num_clusters)
             kw.setdefault("use_pallas", cfg.use_pallas)
+            kw.setdefault("approx_method", cfg.approx_method)
+            kw.setdefault("num_landmarks", cfg.num_landmarks)
         self.policy = make_policy(cfg.policy, cfg.num_clients,
                                   cfg.clients_per_round, cfg.embed_dim,
                                   seed=cfg.seed, **kw)

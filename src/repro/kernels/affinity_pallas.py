@@ -46,6 +46,19 @@ def _rbf_kernel(x_ref, y_ref, g_ref, o_ref, *, block_m, block_n):
     o_ref[...] = jnp.where(rows == cols, 0.0, a)
 
 
+def _cross_rbf_kernel(x_ref, y_ref, g_ref, o_ref):
+    """Rectangular fused RBF: no diagonal convention (x and y differ)."""
+    x = x_ref[...].astype(jnp.float32)            # (BM, d)
+    y = y_ref[...].astype(jnp.float32)            # (BN, d)
+    gamma = g_ref[0, 0]
+    xx = jnp.sum(x * x, axis=-1)[:, None]
+    yy = jnp.sum(y * y, axis=-1)[None, :]
+    xy = jax.lax.dot_general(x, y, (((1,), (1,)), ((), ())),
+                             preferred_element_type=jnp.float32)
+    d2 = jnp.maximum(xx + yy - 2.0 * xy, 0.0)
+    o_ref[...] = jnp.exp(-gamma * d2)
+
+
 def _pad_rows(a, mult):
     pad = (-a.shape[0]) % mult
     return (jnp.pad(a, ((0, pad), (0, 0))), pad) if pad else (a, 0)
@@ -97,3 +110,34 @@ def rbf_affinity_pallas(x, gamma, *, block_m: int = 128, block_n: int = 128,
         interpret=interpret,
     )(xp, yp, gamma_arr)
     return out[:n, :n]
+
+
+@functools.partial(jax.jit, static_argnames=("block_m", "block_n",
+                                             "interpret"))
+def rbf_cross_affinity_pallas(x, y, gamma, *, block_m: int = 128,
+                              block_n: int = 128, interpret: bool = False):
+    """Rectangular fused RBF exp(-gamma d²(x, y)).  (n,d),(m,d) -> (n,m).
+
+    The Nyström landmark path's hotspot: the (N, m) cross-affinity between
+    all N clients and m ≪ N landmarks.  Same (BM, BN) output tiling as the
+    square affinity kernel; no zero-diagonal (rows and columns index
+    different point sets).
+    """
+    n, d = x.shape
+    m = y.shape[0]
+    xp, _ = _pad_rows(x, block_m)
+    yp, _ = _pad_rows(y, block_n)
+    gamma_arr = jnp.asarray(gamma, jnp.float32).reshape(1, 1)
+    grid = (xp.shape[0] // block_m, yp.shape[0] // block_n)
+    out = pl.pallas_call(
+        _cross_rbf_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((block_m, d), lambda i, j: (i, 0)),
+                  pl.BlockSpec((block_n, d), lambda i, j: (j, 0)),
+                  pl.BlockSpec((1, 1), lambda i, j: (0, 0))],
+        out_specs=pl.BlockSpec((block_m, block_n), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((xp.shape[0], yp.shape[0]),
+                                       jnp.float32),
+        interpret=interpret,
+    )(xp, yp, gamma_arr)
+    return out[:n, :m]

@@ -11,7 +11,8 @@ from __future__ import annotations
 import jax
 
 from repro.kernels.affinity_pallas import (pairwise_sq_dists_pallas,
-                                           rbf_affinity_pallas)
+                                           rbf_affinity_pallas,
+                                           rbf_cross_affinity_pallas)
 from repro.kernels.flash_attention_pallas import flash_attention_pallas
 from repro.kernels.ssd_pallas import ssd_chunk_pallas
 
@@ -37,6 +38,11 @@ def pairwise_sq_dists(x, y, **kw):
 
 def rbf_affinity(x, gamma, **kw):
     return rbf_affinity_pallas(x, gamma, interpret=_interpret(), **kw)
+
+
+def rbf_cross_affinity(x, y, gamma, **kw):
+    return rbf_cross_affinity_pallas(x, y, gamma, interpret=_interpret(),
+                                     **kw)
 
 
 def flash_attention(q, k, v, **kw):

@@ -30,6 +30,11 @@ def rbf_affinity_ref(x, gamma: float):
     return a * (1.0 - jnp.eye(x.shape[0], dtype=a.dtype))
 
 
+def rbf_cross_affinity_ref(x, y, gamma: float):
+    """Rectangular exp(-gamma * d2(x, y)) — Nyström cross-affinity block."""
+    return jnp.exp(-gamma * pairwise_sq_dists_ref(x, y))
+
+
 def attention_ref(q, k, v, *, causal=True, window=None, scale=None):
     """Naive GQA attention.  q: (B,S,H,d), k/v: (B,T,K,dv)."""
     B, S, H, dh = q.shape

@@ -182,6 +182,11 @@ def _spec_for(path: str, ndim: int, shape, mesh: Mesh) -> P:
                             ax = ax[-1]
                         else:
                             ax = None
+                # unwrap 1-tuples: P(("data",)) != P("data") even though the
+                # shardings are identical, which broke the expert rule on
+                # single-pod (no 'pod' axis) meshes.
+                if isinstance(ax, tuple) and len(ax) == 1:
+                    ax = ax[0]
                 out.append(ax)
             return P(*out)
     return P()

@@ -30,9 +30,12 @@ def test_higher_sigma_more_skew():
     def skew(sigma):
         shards = partition_non_iid(y, 20, sigma, seed=0)
         hist = label_histogram(y, shards, 10)
-        hist = hist / hist.sum(axis=1, keepdims=True)
-        # mean per-client entropy: lower = more skew
-        ent = -np.sum(np.where(hist > 0, hist * np.log(hist), 0), axis=1)
+        hist = hist / np.maximum(hist.sum(axis=1, keepdims=True), 1e-12)
+        # mean per-client entropy: lower = more skew.  Mask BEFORE the log:
+        # np.log evaluates eagerly on the zero bins and np.where only picks
+        # afterwards, so the unmasked form emits divide/invalid warnings.
+        log_hist = np.log(hist, out=np.zeros_like(hist), where=hist > 0)
+        ent = -np.sum(hist * log_hist, axis=1)
         return ent.mean()
 
     assert skew(0.0) > skew(0.8) > skew(1.0) - 1e-9

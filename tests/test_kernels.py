@@ -31,6 +31,26 @@ def test_rbf_affinity_sweep(n):
     np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-5)
 
 
+@pytest.mark.parametrize("n,m,d", [(16, 16, 4), (100, 33, 16), (129, 65, 8)])
+def test_rbf_cross_affinity_sweep(n, m, d):
+    """Rectangular Nyström cross-affinity block vs the jnp oracle."""
+    x = jax.random.normal(KEY, (n, d))
+    y = jax.random.normal(jax.random.fold_in(KEY, 1), (m, d))
+    got = ops.rbf_cross_affinity(x, y, 0.4, block_m=32, block_n=32)
+    want = ref.rbf_cross_affinity_ref(x, y, 0.4)
+    assert got.shape == (n, m)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-5)
+
+
+def test_rbf_cross_affinity_self_keeps_unit_diagonal():
+    """Unlike the square affinity kernel, the cross block has no
+    zero-diagonal convention: identical rows give affinity 1."""
+    x = jax.random.normal(KEY, (40, 8))
+    got = np.asarray(ops.rbf_cross_affinity(x, x, 0.7, block_m=32,
+                                            block_n=32))
+    np.testing.assert_allclose(np.diag(got), 1.0, atol=1e-5)
+
+
 @pytest.mark.parametrize("S,H,K,dh", [(33, 4, 4, 16), (64, 8, 2, 32),
                                       (50, 4, 1, 16)])
 @pytest.mark.parametrize("causal", [True, False])

@@ -59,6 +59,34 @@ def test_dqre_sc_uses_all_clusters_under_exploration():
     assert seen == {0, 1}
 
 
+def test_dqre_sc_nystrom_contract():
+    """Approximate Algorithm I path: still a valid unique cohort."""
+    pol = make_policy("dqre_sc", N, K, DIM, seed=0, num_clusters=4,
+                      approx_method="nystrom", num_landmarks=N // 2)
+    state = mk_state()
+    sel = pol.select(state)
+    assert len(sel) == K and len(set(sel.tolist())) == K
+    pol.update(state, mk_state(1, 1), Feedback(0.4, -0.6, sel))
+
+
+def test_dqre_sc_caches_clustering_per_round():
+    """select() and update() see the same embeddings once per round;
+    Algorithm I must run once, not twice."""
+    pol = make_policy("dqre_sc", N, K, DIM, seed=0, num_clusters=4)
+    s0, s1 = mk_state(seed=0, round_idx=0), mk_state(seed=1, round_idx=1)
+    pol.select(s0)
+    assert pol.cluster_computes == 1
+    # update clusters next_state's embeddings — one fresh compute
+    pol.update(s0, s1, Feedback(0.4, -0.6, np.arange(K)))
+    assert pol.cluster_computes == 2
+    # next round's select sees the same embeddings update just clustered
+    pol.select(mk_state(seed=1, round_idx=1))
+    assert pol.cluster_computes == 2                    # cache hit
+    # a genuinely new embedding matrix recomputes
+    pol.select(mk_state(seed=2, round_idx=2))
+    assert pol.cluster_computes == 3
+
+
 def test_dqre_sc_auto_k_contract():
     """Eigengap auto-k (paper §3.4): still returns a valid unique cohort."""
     pol = make_policy("dqre_sc", N, K, DIM, seed=0, num_clusters=6,

@@ -4,9 +4,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import (affinity_matrix, eigengap_k, kmeans,
+from repro.core import (affinity_matrix, auto_gamma, eigengap_k, kmeans,
                         normalized_laplacian, spectral_cluster,
                         spectral_embedding)
+from repro.core.kmeans import pairwise_sq_dists
 
 KEY = jax.random.PRNGKey(0)
 
@@ -27,6 +28,26 @@ def test_affinity_properties():
     assert np.allclose(a, a.T, atol=1e-6)          # symmetric
     assert np.all(a >= 0) and np.all(a <= 1)       # RBF range
     assert np.allclose(np.diag(a), 0)              # zero diagonal
+
+
+def test_auto_gamma_matches_offdiag_median_across_scales():
+    """Regression: jnp.median on the NaN-masked distance matrix returned
+    NaN and silently collapsed gamma to the 0.5 fallback for every input.
+    The median heuristic must track the true off-diagonal median at any
+    data scale."""
+    base = two_blobs()[0]
+    for scale in (1.0, 100.0):
+        x = jnp.asarray(base * scale)
+        d2 = np.asarray(pairwise_sq_dists(x, x))
+        off = ~np.eye(len(d2), dtype=bool)
+        true_med = np.median(d2[off])
+        expect = 1.0 / (2.0 * true_med)
+        got = float(auto_gamma(jnp.asarray(d2 * off)))
+        np.testing.assert_allclose(got, expect, rtol=1e-4)
+        # and the affinity built with auto-gamma matches the explicit one
+        a_auto = np.asarray(affinity_matrix(x))
+        a_explicit = np.asarray(affinity_matrix(x, gamma=expect))
+        np.testing.assert_allclose(a_auto, a_explicit, atol=1e-5)
 
 
 def test_laplacian_psd_with_zero_eigenvalue():
