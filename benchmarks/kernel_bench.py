@@ -52,6 +52,48 @@ def _bench_spectral_selection(csv_rows, key):
                      f"clients_per_sec={n_big / (us_big / 1e6):.0f}"))
 
 
+def _bench_cohort(csv_rows, key):
+    """Dense vs Nyström vs sharded-Nyström cohort selection wall time.
+
+    Engine-level end-to-end timings (landmarks + eigensolve + k-means)
+    at the three cohort scales; dense is only feasible at n = 4096 (the
+    32k/100k affinity matrices are 4/40 GB).  Emits ``BENCH_cohort.json``
+    alongside the CSV rows so the sweep is machine-readable.
+    """
+    import json
+
+    from repro.cohort import CohortConfig, CohortEngine
+
+    k, d, m = 8, 8, 512
+    devices = len(jax.devices())
+    records = []
+    for n in (4096, 32768, 100_000):
+        x = jax.random.normal(jax.random.fold_in(key, n), (n, d),
+                              jnp.float32) * 4.0
+        x = jax.device_get(x)
+        row = {"n": n, "devices": devices, "num_landmarks": m,
+               "dense_us": None, "nystrom_us": None, "sharded_us": None}
+        methods = (["dense"] if n <= 4096 else []) + ["nystrom", "sharded"]
+        for method in methods:
+            cfg = CohortConfig(
+                num_clusters=k, method=method,
+                num_landmarks=None if method == "dense" else m)
+
+            def run_once(a, cfg=cfg):
+                # fresh engine per call: the fingerprint cache would
+                # otherwise turn the timed call into a no-op
+                return CohortEngine(cfg, seed=0).select(a).assign
+
+            us = _time(run_once, x, iters=1)
+            row[f"{method}_us"] = us
+            csv_rows.append((f"cohort/{method}/n{n}", us,
+                             f"clients_per_sec={n / (us / 1e6):.0f}"))
+        records.append(row)
+    with open("BENCH_cohort.json", "w") as fh:
+        json.dump({"unit": "us_per_select", "records": records}, fh,
+                  indent=2)
+
+
 def run(csv_rows: list) -> None:
     key = jax.random.PRNGKey(0)
     on_tpu = jax.default_backend() == "tpu"
@@ -71,6 +113,7 @@ def run(csv_rows: list) -> None:
             csv_rows.append((f"kernel/cross_rbf_pallas/n{n}", us_c, ""))
 
     _bench_spectral_selection(csv_rows, key)
+    _bench_cohort(csv_rows, key)
 
     # flash attention jnp-blocked vs naive at growing S
     from repro.models.attention import blocked_attention

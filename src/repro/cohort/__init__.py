@@ -1,0 +1,26 @@
+"""Sharded cohort-selection engine.
+
+Owns the select–cluster–cache lifecycle of DQRE-SCnet's Algorithm I at
+production cohort scale: distributed Nyström over a client-row mesh,
+pluggable landmark quality (uniform / leverage / k-means++), blocked
+warm-startable eigensolvers, and drift-gated incremental re-clustering.
+See ``cohort/engine.py`` for the lifecycle and ROADMAP.md ("Cohort
+engine") for the architecture sketch.
+"""
+
+from repro.cohort.engine import (CohortConfig, CohortEngine, CohortResult,
+                                 CohortState)
+from repro.cohort.eigensolver import subspace_topk, topk_eigh
+from repro.cohort.landmarks import (LANDMARK_STRATEGIES, select_landmarks,
+                                    uniform_landmarks, kmeanspp_landmarks,
+                                    leverage_landmarks)
+from repro.cohort.nystrom import nystrom_from_landmarks
+from repro.cohort.sharded import sharded_nystrom_from_landmarks
+
+__all__ = [
+    "CohortConfig", "CohortEngine", "CohortResult", "CohortState",
+    "subspace_topk", "topk_eigh",
+    "LANDMARK_STRATEGIES", "select_landmarks", "uniform_landmarks",
+    "kmeanspp_landmarks", "leverage_landmarks",
+    "nystrom_from_landmarks", "sharded_nystrom_from_landmarks",
+]

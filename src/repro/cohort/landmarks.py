@@ -1,0 +1,124 @@
+"""Landmark selection strategies for the Nyström cohort path.
+
+Uniform landmark sampling is unbiased but wasteful on the skewed non-IID
+embedding distributions federated cohorts actually produce: a head
+cluster holding 80 % of the clients soaks up ~80 % of the landmarks and
+the tail clusters — exactly the clients DQRE-SCnet exists to de-bias
+toward — are missed entirely, collapsing their Nyström embedding onto
+the head.  Two standard remedies, both pluggable via
+``select_landmarks(..., strategy=...)``:
+
+* ``"kmeans++"`` — D² (farthest-point-weighted) sampling: each new
+  landmark is drawn with probability proportional to its squared
+  distance from the landmarks picked so far, so every well-separated
+  mode receives a landmark regardless of its population.  Runs on a
+  uniformly pre-sampled pool of ``pool_factor * m`` points with an
+  incrementally maintained min-distance vector, so the cost is
+  O(pool · m · d) rather than the naive O(n · m² · d).
+* ``"leverage"`` — approximate ridge leverage scores (Musco & Musco,
+  2017): score ℓ_i = c_iᵀ (W_p + λI)⁻¹ c_i against a uniform pilot set,
+  then sample m landmarks ∝ ℓ without replacement.  Rare-mode points
+  are poorly explained by the pilot kernel and receive high leverage.
+
+Every strategy is a pure function of its PRNG key — repeated calls with
+the same key return bit-identical index sets (the engine's determinism
+contract depends on this).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.kmeans import pairwise_sq_dists
+
+_EPS = 1e-12
+
+#: pool oversampling factor for the kmeans++ strategy (see module doc).
+_KPP_POOL_FACTOR = 32
+#: pilot-set size cap for approximate leverage scores.
+_LEVERAGE_PILOT_CAP = 512
+
+
+@functools.partial(jax.jit, static_argnames=("m",))
+def uniform_landmarks(key, x, m: int):
+    """m indices sampled uniformly without replacement."""
+    return jax.random.choice(key, x.shape[0], (m,), replace=False)
+
+
+@functools.partial(jax.jit, static_argnames=("m",))
+def kmeanspp_landmarks(key, x, m: int):
+    """D²-sampled landmark indices (k-means++ seeding over a pool).
+
+    The min-distance vector is updated incrementally against only the
+    newest landmark, so each of the m rounds costs O(pool · d).
+    """
+    n = x.shape[0]
+    pool_n = min(n, max(_KPP_POOL_FACTOR * m, 4 * m))
+    pool_key, first_key, seq_key = jax.random.split(key, 3)
+    pool_idx = jax.random.choice(pool_key, n, (pool_n,), replace=False)
+    pool = x[pool_idx].astype(jnp.float32)
+
+    first = jax.random.randint(first_key, (), 0, pool_n)
+    picked0 = jnp.zeros((m,), jnp.int32).at[0].set(first)
+    d0 = jnp.sum((pool - pool[first]) ** 2, axis=1)
+
+    def body(i, carry):
+        picked, dmin, k = carry
+        k, sub = jax.random.split(k)
+        probs = dmin / jnp.maximum(jnp.sum(dmin), _EPS)
+        nxt = jax.random.choice(sub, pool_n, p=probs)
+        d2 = jnp.sum((pool - pool[nxt]) ** 2, axis=1)
+        return picked.at[i].set(nxt), jnp.minimum(dmin, d2), k
+
+    picked, _, _ = jax.lax.fori_loop(1, m, body, (picked0, d0, seq_key))
+    return pool_idx[picked]
+
+
+@functools.partial(jax.jit, static_argnames=("m",))
+def leverage_landmarks(key, x, m: int, *, gamma=None):
+    """Indices sampled ∝ approximate ridge leverage of the RBF kernel.
+
+    A uniform pilot set P (|P| ≤ 512) stands in for the full kernel:
+    ℓ_i = c_iᵀ (W_P + λI)⁻¹ c_i with c_i the RBF affinity of point i to
+    P and λ = tr(W_P)/|P| (the standard self-tuning ridge).  Computing ℓ
+    for all n points is two (n, p) matmuls — O(n·p·d + n·p²).
+    """
+    from repro.core.spectral import auto_gamma
+
+    n = x.shape[0]
+    x = x.astype(jnp.float32)
+    p = min(n, max(m, 256), _LEVERAGE_PILOT_CAP)
+    pilot_key, draw_key = jax.random.split(key)
+    pilot = x[jax.random.choice(pilot_key, n, (p,), replace=False)]
+
+    d2 = pairwise_sq_dists(x, pilot)                      # (n, p)
+    if gamma is None:
+        gamma = auto_gamma(d2)
+    c = jnp.exp(-gamma * d2)
+    w = jnp.exp(-gamma * pairwise_sq_dists(pilot, pilot))  # (p, p)
+    lam = jnp.trace(w) / p
+    ew, uw = jnp.linalg.eigh(w + lam * jnp.eye(p, dtype=w.dtype))
+    cu = c @ uw                                            # (n, p)
+    scores = jnp.sum(cu * cu / jnp.maximum(ew, _EPS)[None, :], axis=1)
+    probs = scores / jnp.maximum(jnp.sum(scores), _EPS)
+    return jax.random.choice(draw_key, n, (m,), replace=False, p=probs)
+
+
+LANDMARK_STRATEGIES = ("uniform", "kmeans++", "leverage")
+
+
+def select_landmarks(key, x, m: int, strategy: str = "uniform", *,
+                     gamma=None):
+    """Dispatch to a landmark strategy; returns (m,) int indices into x."""
+    if strategy == "uniform":
+        return uniform_landmarks(key, x, m)
+    if strategy == "kmeans++":
+        return kmeanspp_landmarks(key, x, m)
+    if strategy == "leverage":
+        return leverage_landmarks(key, x, m, gamma=gamma)
+    raise ValueError(
+        f"unknown landmark strategy {strategy!r}; "
+        f"expected one of {LANDMARK_STRATEGIES}")

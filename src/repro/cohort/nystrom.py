@@ -1,0 +1,134 @@
+"""Landmark-explicit Nyström embedding — the math core of the engine.
+
+``nystrom_from_landmarks`` is the one-shot Nyström extension (Fowlkes et
+al., 2004) factored so the LANDMARK SET IS AN INPUT, not sampled inside:
+the engine owns landmark selection (uniform / leverage / k-means++, see
+``cohort/landmarks.py``) and warm-start state, and both the single-device
+path here and the mesh-sharded path (``cohort/sharded.py``) consume the
+same ``_nystrom_core`` body.  The core is written against an optional
+``axis_name`` so the only difference between the two paths is a pair of
+``lax.psum`` reductions over the client-row shards:
+
+    col  = Σ_i C_ij            (m,)   — psum over row shards
+    SᵀS  = Σ_shards S_sᵀ S_s   (m, m) — psum over row shards
+
+Everything m-sized (the landmark block W, its inverse square root, the
+normalized operator M and its eigenbasis) is replicated; everything
+N-sized (C, S, the output embedding V) stays sharded.
+
+``repro.core.spectral.nystrom_spectral_embedding`` delegates here, so
+there is exactly one implementation of the extension in the tree.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.cohort.eigensolver import isqrt_from_eigs, topk_eigh
+from repro.core.kmeans import pairwise_sq_dists
+from repro.core.spectral import cross_affinity, row_normalize
+
+_EPS = 1e-12
+
+
+def _nystrom_core(c, w_isqrt, k: int, *, axis_name=None,
+                  mm_solver: str = "eigh", mm_iters: int = 30,
+                  mm_q0=None, key=None, block_rows: int = 2048):
+    """Degree-normalize C, solve the m×m operator, extend to all rows.
+
+    ``c`` is the (n_local, m) cross-affinity (the full (N, m) block on
+    the single-device path, one row shard under ``shard_map``).  With
+    ``axis_name`` set, the two cross-shard sums are ``psum``ed so every
+    device sees the same m×m operator while its rows of S / V stay local.
+
+    Returns ``(y_rownormed, evals_of_L_norm_ascending, mm_basis)`` where
+    ``mm_basis`` is the top-k eigenbasis of M — the warm-start payload.
+    """
+    col = jnp.sum(c, axis=0)                                   # (m,)
+    if axis_name is not None:
+        col = jax.lax.psum(col, axis_name)
+    # approximate degrees d̂ = C W⁺ (Cᵀ 1); W⁺ = W^{-1/2} W^{-1/2}
+    d_hat = c @ (w_isqrt @ (w_isqrt @ col))
+    s = c * jax.lax.rsqrt(jnp.maximum(d_hat, _EPS))[:, None]   # (n_l, m)
+    sts = s.T @ s
+    if axis_name is not None:
+        sts = jax.lax.psum(sts, axis_name)
+    mm = w_isqrt @ sts @ w_isqrt
+    mm = 0.5 * (mm + mm.T)
+    r = mm.shape[0] if mm_solver == "eigh" else k
+    lam, top = topk_eigh(mm, r, solver=mm_solver, iters=mm_iters,
+                         q0=mm_q0, key=key, block_rows=block_rows)
+    basis = top[:, :k]
+    v = (s @ (w_isqrt @ basis)) * jax.lax.rsqrt(
+        jnp.maximum(lam[:k], _EPS))[None, :]                   # (n_l, k)
+    evals = 1.0 - lam                                          # asc. L_norm
+    return row_normalize(v), evals, basis
+
+
+def landmark_block_isqrt(z, gamma, *, w=None, w_solver: str = "eigh",
+                         w_rank: int | None = None, iters: int = 30,
+                         w_q0=None, key=None, block_rows: int = 2048):
+    """W^{-1/2} of the landmark affinity block, plus its eigenbasis.
+
+    ``w`` overrides the affinity block (callers that already hold the
+    landmark rows of C pass them to stay backend-consistent with C).
+    ``w_solver="subspace"`` with ``w_rank`` r < m builds the rank-r
+    pseudo-inverse square root from the blocked solver — the m ≥ 10⁴
+    regime where dense eigh is not an option.  Returns
+    ``(w_isqrt (m, m), w_basis (m, r))``.
+    """
+    m = z.shape[0]
+    if w is None:
+        w = jnp.exp(-gamma * pairwise_sq_dists(z, z))
+    w = 0.5 * (w + w.T)
+    r = m if w_solver == "eigh" else min(m, w_rank or m)
+    ew, uw = topk_eigh(w, r, solver=w_solver, iters=iters, q0=w_q0,
+                       key=key, block_rows=block_rows)
+    return isqrt_from_eigs(ew, uw), uw
+
+
+# NOT jitted at this level: under jit XLA re-fuses the jnp cross-affinity
+# while the Pallas call stays opaque, and the ~1e-7 accumulation
+# differences rotate the (degenerate) leading eigenspace arbitrarily.
+# Eager, interpret-mode Pallas is bit-identical to the jnp formula, and
+# callers inside jit contexts (spectral_cluster) trace this anyway.
+# The eager dispatch costs ~1.8x wall-clock at N=100k — at that scale
+# use the sharded path (fully jitted; a 1-way mesh on one device),
+# which the engine's "auto" method resolution does by default.
+def nystrom_from_landmarks(x, idx, k: int, gamma, *,
+                           use_pallas: bool = False,
+                           w_solver: str = "eigh",
+                           w_rank: int | None = None,
+                           mm_solver: str = "eigh", iters: int = 30,
+                           w_q0=None, mm_q0=None, key=None,
+                           block_rows: int = 2048):
+    """Nyström normalized-Laplacian embedding from an explicit landmark set.
+
+    x: (n, d) points; idx: (m,) landmark indices into x; gamma: RBF
+    bandwidth (explicit — the engine owns the heuristic so warm starts
+    can pin it).  Returns ``(y, evals, mm_basis, w_basis)``:
+
+    * ``y`` — (n, k) row-normalized embedding (rows of V);
+    * ``evals`` — ascending spectrum of the approximate L_norm (length m
+      for ``mm_solver="eigh"``, k for ``"subspace"``);
+    * ``mm_basis`` / ``w_basis`` — the two eigenbases a later call can
+      warm-start from (``mm_q0`` / ``w_q0``).
+    """
+    x = x.astype(jnp.float32)
+    z = x[idx]
+    if key is not None:
+        w_key, mm_key = jax.random.split(key)
+    else:
+        w_key = mm_key = None
+    c = cross_affinity(x, z, gamma=gamma, use_pallas=use_pallas)  # (n, m)
+    # W = the landmark rows of C (not recomputed from z): keeping W on
+    # the same backend/accumulation as C keeps the two consistent inside
+    # the degenerate leading eigenspace a well-separated clustering has.
+    w_isqrt, w_basis = landmark_block_isqrt(
+        z, gamma, w=c[idx], w_solver=w_solver, w_rank=w_rank,
+        iters=iters, w_q0=w_q0, key=w_key, block_rows=block_rows)
+    y, evals, basis = _nystrom_core(
+        c, w_isqrt, k, mm_solver=mm_solver, mm_iters=iters, mm_q0=mm_q0,
+        key=mm_key, block_rows=block_rows)
+    return y, evals, basis, w_basis

@@ -22,7 +22,6 @@ import jax
 
 from repro.core.dqn import DQNAgent, DQNConfig
 from repro.core.kmeans import pairwise_sq_dists
-from repro.core.spectral import spectral_cluster
 
 
 @dataclasses.dataclass
@@ -126,85 +125,76 @@ class FavorSelection(SelectionPolicy):
 
 
 class DQREScSelection(SelectionPolicy):
-    """DQRE-SCnet (the paper): spectral clustering + cluster-level DQN."""
+    """DQRE-SCnet (the paper): spectral clustering + cluster-level DQN.
+
+    Algorithm I (clustering) is delegated wholesale to the cohort
+    subsystem: a :class:`repro.cohort.CohortEngine` owns method
+    resolution (dense / Nyström / mesh-sharded Nyström), landmark
+    strategy, the per-round fingerprint cache, and drift-gated
+    warm-started re-clustering.  This policy keeps only Algorithm II:
+    the cluster-level DQN and the cohort draw.
+    """
     name = "dqre_sc"
 
     def __init__(self, num_clients, clients_per_round, embed_dim, seed=0,
                  num_clusters: int = 8, use_pallas: bool = False,
                  auto_k: bool = False, approx_method: str = "dense",
                  num_landmarks: Optional[int] = None,
+                 landmarks: str = "uniform", warm_start: bool = True,
+                 cohort_config=None,
                  dqn_overrides: Optional[dict] = None):
         super().__init__(num_clients, clients_per_round, embed_dim, seed)
+        from repro.cohort import CohortConfig, CohortEngine
         self.num_clusters = num_clusters
-        self.use_pallas = use_pallas
-        # paper §3.4: pick k by the first large eigengap of L_norm, capped
-        # by num_clusters (the DQN action space stays fixed; clusters
-        # beyond k_hat are simply empty that round).
-        self.auto_k = auto_k
-        # Algorithm I scale regime: "dense" is the exact O(N²)/O(N³) path,
-        # "nystrom" the landmark approximation viable at N ~ 10⁵ clients.
-        self.approx_method = approx_method
-        self.num_landmarks = num_landmarks
+        if cohort_config is None:
+            # approx_method maps 1:1 onto engine methods ("dense",
+            # "nystrom", "sharded", "auto"); "dense" stays the default so
+            # small simulated cohorts keep the exact Algorithm I path.
+            cohort_config = CohortConfig(
+                num_clusters=num_clusters, method=approx_method,
+                num_landmarks=num_landmarks, landmarks=landmarks,
+                use_pallas=use_pallas, auto_k=auto_k,
+                warm_start=warm_start)
+        else:
+            if cohort_config.num_clusters != num_clusters:
+                # the DQN action space, the pool loop in select(), and
+                # the engine's assignment range must agree — a mismatch
+                # would silently make clusters >= num_clusters
+                # unselectable
+                raise ValueError(
+                    f"cohort_config.num_clusters="
+                    f"{cohort_config.num_clusters} must equal the "
+                    f"policy's num_clusters={num_clusters}")
+            overlapping = dict(approx_method=(approx_method, "dense"),
+                               num_landmarks=(num_landmarks, None),
+                               landmarks=(landmarks, "uniform"),
+                               use_pallas=(use_pallas, False),
+                               auto_k=(auto_k, False),
+                               warm_start=(warm_start, True))
+            clash = [name for name, (got, default) in overlapping.items()
+                     if got != default]
+            if clash:
+                raise ValueError(
+                    f"pass {clash} inside cohort_config, not alongside "
+                    f"it — an explicit cohort_config replaces those "
+                    f"constructor arguments entirely")
+        self.engine = CohortEngine(cohort_config, seed=seed + 1)
         cfg = DQNConfig(state_dim=(num_clusters + 1) * embed_dim,
                         num_actions=num_clusters,
                         **(dqn_overrides or {}))
         self.agent = DQNAgent(jax.random.PRNGKey(seed), cfg)
-        self._key = jax.random.PRNGKey(seed + 1)
         self._last_assign: Optional[np.ndarray] = None
         self._last_state_vec: Optional[np.ndarray] = None
         self._last_actions: Optional[list] = None
-        # select() and update() see the same embeddings once per round —
-        # cache the assignment by content fingerprint so Algorithm I runs
-        # once, not twice, per round.
-        self._assign_cache: Optional[tuple] = None   # (fingerprint, assign)
-        self.cluster_computes = 0
+
+    @property
+    def cluster_computes(self) -> int:
+        """Algorithm I solves actually executed (engine cache hits excluded)."""
+        return self.engine.stats["solves"]
 
     # -- Algorithm I: cluster the client embeddings -------------------------
-    @staticmethod
-    def _fingerprint(embeds: np.ndarray) -> bytes:
-        import hashlib
-        h = hashlib.sha1(np.ascontiguousarray(embeds).tobytes())
-        h.update(str(embeds.shape).encode())
-        return h.digest()
-
     def _cluster(self, embeds: np.ndarray):
-        embeds = np.asarray(embeds, np.float32)
-        fp = self._fingerprint(embeds)
-        if self._assign_cache is not None and self._assign_cache[0] == fp:
-            return self._assign_cache[1]
-        self._key, sub = jax.random.split(self._key)
-        k = self.num_clusters
-        if self.auto_k:
-            from repro.core.spectral import (affinity_matrix,
-                                             default_num_landmarks,
-                                             eigengap_k,
-                                             nystrom_spectral_embedding,
-                                             spectral_embedding)
-            import jax.numpy as jnp
-            xe = jnp.asarray(embeds)
-            if self.approx_method == "nystrom":
-                # the approximate L_norm spectrum is enough for the
-                # eigengap — never build the dense n×n affinity here, or
-                # auto_k would reintroduce the O(N²)/O(N³) ceiling the
-                # landmark path exists to remove.
-                self._key, lm = jax.random.split(self._key)
-                m = self.num_landmarks or default_num_landmarks(
-                    len(embeds), self.num_clusters)
-                _, evals = nystrom_spectral_embedding(
-                    lm, xe, self.num_clusters, m,
-                    use_pallas=self.use_pallas)
-            else:
-                a = affinity_matrix(xe, use_pallas=self.use_pallas)
-                _, evals = spectral_embedding(a, self.num_clusters)
-            k = int(np.clip(int(eigengap_k(evals, self.num_clusters)),
-                            2, self.num_clusters))
-        assign, _, _ = spectral_cluster(
-            sub, embeds, k, use_pallas=self.use_pallas,
-            method=self.approx_method, num_landmarks=self.num_landmarks)
-        assign = np.asarray(assign)
-        self.cluster_computes += 1
-        self._assign_cache = (fp, assign)
-        return assign
+        return self.engine.select(embeds).assign
 
     def _state_vec(self, state: RoundState, assign: np.ndarray) -> np.ndarray:
         cents = np.zeros((self.num_clusters, self.embed_dim), np.float32)

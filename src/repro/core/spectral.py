@@ -95,9 +95,14 @@ def normalized_laplacian(a):
     return jnp.eye(n) - a * inv_sqrt[:, None] * inv_sqrt[None, :]
 
 
-def _row_normalize(x):
+def row_normalize(x):
+    """Rows scaled to unit norm (the Y step of Algorithm I); shared with
+    the cohort subsystem's Nyström core."""
     norms = jnp.linalg.norm(x, axis=1, keepdims=True)
     return x / jnp.maximum(norms, _EPS)
+
+
+_row_normalize = row_normalize
 
 
 def spectral_embedding(a, k: int, *, solver: str = "eigh",
@@ -153,9 +158,9 @@ def nystrom_spectral_embedding(key, x, k: int, num_landmarks: int, *,
                                use_pallas: bool = False):
     """Approximate normalized-Laplacian embedding via Nyström landmarks.
 
-    Samples m landmarks Z ⊂ x, computes only the (n, m) cross-affinity
-    C = exp(-γ d²(x, Z)) and its landmark block W = C[Z], and extends the
-    m×m eigenproblem to all n points:
+    Samples m UNIFORM landmarks Z ⊂ x and delegates the one-shot Nyström
+    extension (Fowlkes et al., 2004) to the cohort subsystem's
+    landmark-explicit core (``repro.cohort.nystrom``):
 
         D̂ = diag(C W⁺ Cᵀ 1)                approximate degrees
         S  = D̂^{-1/2} C                     degree-normalized cross block
@@ -164,44 +169,25 @@ def nystrom_spectral_embedding(key, x, k: int, num_landmarks: int, *,
 
     The top-k eigenpairs of Â are the smallest-k of L_norm = I − Â.
     Returns (Y row-normalized (n, k), evals of L_norm ascending (m,)).
+    ``key`` fully determines the landmark set: repeated calls with the
+    same key are bit-identical.  For non-uniform landmark strategies,
+    warm starts, and the sharded path, use ``repro.cohort.CohortEngine``.
     """
+    # deferred import: cohort builds on core, not the other way around
+    from repro.cohort.nystrom import nystrom_from_landmarks
+
     n = x.shape[0]
     m = min(int(num_landmarks), n)
     if m < k:
         raise ValueError(f"num_landmarks={m} must be >= k={k}")
     x = x.astype(jnp.float32)
     idx = jax.random.choice(key, n, (m,), replace=False)
-    z = x[idx]
     if gamma is None:
         rows = x[:min(n, _GAMMA_SAMPLE_ROWS)]
-        gamma = auto_gamma(pairwise_sq_dists(rows, z))
-    c = cross_affinity(x, z, gamma=gamma, use_pallas=use_pallas)   # (n, m)
-    w = c[idx]                                                     # (m, m)
-    w = 0.5 * (w + w.T)
-
-    ew, uw = jnp.linalg.eigh(w)
-    # pseudo-inverse powers with eigenvalue clipping: RBF kernel blocks are
-    # PSD in exact arithmetic but near-singular when landmarks cluster.
-    good = ew > 1e-6 * jnp.max(ew)
-    inv = jnp.where(good, 1.0 / jnp.maximum(ew, _EPS), 0.0)
-    inv_sqrt_w = uw * jnp.sqrt(inv)[None, :]        # W^{-1/2} = U Λ^{-1/2}
-    w_isqrt = inv_sqrt_w @ uw.T                     # (m, m)
-
-    # approximate degrees: d̂ = C W⁺ (Cᵀ 1)
-    col = c.T @ jnp.ones((n,), c.dtype)             # (m,)
-    d_hat = c @ (w_isqrt @ (w_isqrt @ col))
-    inv_sqrt_d = jax.lax.rsqrt(jnp.maximum(d_hat, _EPS))
-    s = c * inv_sqrt_d[:, None]                     # (n, m)
-
-    mm = w_isqrt @ (s.T @ s) @ w_isqrt
-    mm = 0.5 * (mm + mm.T)
-    em, um = jnp.linalg.eigh(mm)                    # ascending
-    top = um[:, ::-1][:, :k]                        # largest-k of Â
-    lam = em[::-1][:k]
-    v = (s @ (w_isqrt @ top)) * jax.lax.rsqrt(
-        jnp.maximum(lam, _EPS))[None, :]            # (n, k), ≈ orthonormal
-    evals = 1.0 - em[::-1]                          # L_norm spectrum, asc.
-    return _row_normalize(v), evals
+        gamma = auto_gamma(pairwise_sq_dists(rows, x[idx]))
+    y, evals, _, _ = nystrom_from_landmarks(x, idx, k, gamma,
+                                            use_pallas=use_pallas)
+    return y, evals
 
 
 def default_num_landmarks(n: int, k: int) -> int:
@@ -219,14 +205,26 @@ def eigengap_k(evals, max_k: int = 10) -> jnp.ndarray:
 def spectral_cluster(key, x, k: int, *, gamma: float | None = None,
                      use_pallas: bool = False, method: str = "dense",
                      num_landmarks: int | None = None,
-                     solver: str = "eigh"):
+                     solver: str = "eigh",
+                     landmark_key=None):
     """Full Algorithm I.  x: (n, d) points -> (assignments, Y, evals).
 
     ``method="dense"`` computes the exact n×n affinity (``solver`` picks
     the eigensolver); ``method="nystrom"`` uses ``num_landmarks`` sampled
     landmarks (default min(n, max(8k, 64))) and scales to n ~ 10⁵.
+
+    Landmark sampling is a pure function of the PRNG key: by default the
+    landmark key is split off ``key``; pass ``landmark_key`` to pin the
+    landmark set independently of the k-means key (callers that manage
+    their own key streams — e.g. the cohort engine — use this so
+    repeated calls with the same key are bit-identical).
     """
     km_key, lm_key = jax.random.split(key)
+    if landmark_key is not None:
+        if method != "nystrom":
+            raise ValueError(
+                "landmark_key only applies to method='nystrom'")
+        lm_key = landmark_key
     if method == "dense":
         if num_landmarks is not None:
             raise ValueError("num_landmarks only applies to method='nystrom'")

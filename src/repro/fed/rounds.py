@@ -35,6 +35,10 @@ class RoundResult:
     reward: float
     selected: np.ndarray
     seconds: float
+    # per-phase wall times (monotonic perf_counter): select / train /
+    # aggregate / evaluate / update — so cohort-selection cost is
+    # attributable separately from local SGD when profiling a run.
+    timings: dict = dataclasses.field(default_factory=dict)
 
 
 @dataclasses.dataclass
@@ -54,8 +58,12 @@ class RunnerConfig:
     seed: int = 0
     policy: str = "fedavg"
     use_pallas: bool = False
-    approx_method: str = "dense"           # "dense" | "nystrom" (Algorithm I)
+    # Algorithm I scale regime, resolved by the cohort engine:
+    # "dense" | "nystrom" | "sharded" | "auto"
+    approx_method: str = "dense"
     num_landmarks: Optional[int] = None    # Nyström landmark count (m ≪ N)
+    landmarks: str = "uniform"             # "uniform" | "leverage" | "kmeans++"
+    warm_start: bool = True                # drift-gated re-clustering
     policy_kwargs: Optional[dict] = None
 
 
@@ -89,6 +97,8 @@ class FederatedRunner:
             kw.setdefault("use_pallas", cfg.use_pallas)
             kw.setdefault("approx_method", cfg.approx_method)
             kw.setdefault("num_landmarks", cfg.num_landmarks)
+            kw.setdefault("landmarks", cfg.landmarks)
+            kw.setdefault("warm_start", cfg.warm_start)
         self.policy = make_policy(cfg.policy, cfg.num_clients,
                                   cfg.clients_per_round, cfg.embed_dim,
                                   seed=cfg.seed, **kw)
@@ -138,25 +148,37 @@ class FederatedRunner:
         if not self._warmed_up:
             self.warmup()
         c = self.cfg
-        t0 = time.time()
+        # perf_counter, not time.time(): monotonic, unaffected by NTP
+        # slews, and the basis of the per-phase attribution below.
+        t0 = time.perf_counter()
         state = self._round_state()
         selected = np.asarray(self.policy.select(state))
+        t_select = time.perf_counter()
 
         stacked, losses = self._train_cohort(selected)
         self.client_embeds[selected] = weight_delta_embedding(
             self.embedder, stacked, self.global_params)
+        t_train = time.perf_counter()
         weights = self.shard_sizes[selected]
         self.global_params = fedavg_aggregate(stacked, weights)
+        t_aggregate = time.perf_counter()
 
         acc, loss, _ = evaluate(self.global_params, self.x_test, self.y_test)
         acc = float(acc)
+        t_evaluate = time.perf_counter()
         reward = favor_reward(acc, c.target_accuracy)
         next_state = self._round_state()
         self.policy.update(state, next_state,
                            Feedback(acc, reward, selected))
         self.prev_acc = acc
+        t_update = time.perf_counter()
         res = RoundResult(self.round_idx, acc, float(loss), reward, selected,
-                          time.time() - t0)
+                          t_update - t0,
+                          timings={"select": t_select - t0,
+                                   "train": t_train - t_select,
+                                   "aggregate": t_aggregate - t_train,
+                                   "evaluate": t_evaluate - t_aggregate,
+                                   "update": t_update - t_evaluate})
         self.history.append(res)
         self.round_idx += 1
         return res

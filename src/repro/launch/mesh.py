@@ -26,5 +26,18 @@ def make_test_mesh(data: int = 2, model: int = 2, pod: int = 1) -> Mesh:
     return jax.make_mesh((data, model), ("data", "model"))
 
 
+def make_cohort_mesh(num_devices: int | None = None) -> Mesh:
+    """1-D mesh for the sharded cohort-selection engine.
+
+    The distributed Nyström path shards CLIENT ROWS over the single
+    ``"clients"`` axis (the m-sized landmark problem is replicated), so
+    the cohort mesh is flat over every visible device — on a TPU pod
+    that is all chips; under ``--xla_force_host_platform_device_count``
+    the forced host devices.
+    """
+    n = num_devices or len(jax.devices())
+    return jax.make_mesh((n,), ("clients",))
+
+
 def device_count_available(n: int) -> bool:
     return len(jax.devices()) >= n

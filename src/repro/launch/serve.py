@@ -1,12 +1,23 @@
-"""Serving launcher: batched prefill + decode with continuous batching.
+"""Serving launchers: the LM server loop and the cohort-selection service.
 
-Implements a small production-shaped server loop: a request queue, one
-prefill step per admitted batch, then token-by-token decode with greedy or
-temperature sampling.  Used by examples/serve_lm.py; the decode step is
-exactly the one the dry-run lowers for decode_32k / long_500k.
+``Server`` implements a small production-shaped LM loop: a request
+queue, one prefill step per admitted batch, then token-by-token decode
+with greedy or temperature sampling.  Used by examples/serve_lm.py; the
+decode step is exactly the one the dry-run lowers for decode_32k /
+long_500k.
 
   PYTHONPATH=src python -m repro.launch.serve --arch gemma-2b --reduced \
       --batch 4 --prompt-len 32 --gen-len 32
+
+``CohortServer`` is the federated control-plane counterpart: it owns the
+live client-embedding table and a ``repro.cohort.CohortEngine``, and
+answers cohort requests with a cluster-stratified draw.  Because the
+engine warm-starts and fingerprint-caches between requests, steady-state
+selection cost is dominated by the (N, m) cross-affinity — sharded over
+the cohort mesh when more than one device is visible.
+
+  PYTHONPATH=src python -m repro.launch.serve --cohort 100000 \
+      --cohort-size 64 --landmarks kmeans++ --rounds 5
 """
 
 from __future__ import annotations
@@ -91,6 +102,81 @@ class Server:
         return [r for r in requests if r.uid >= 0]
 
 
+class CohortServer:
+    """Cohort-selection service backed by a :class:`CohortEngine`.
+
+    Holds the latest (N, d) client-embedding table (updated as client
+    deltas stream in via ``update_embeddings``) and serves
+    ``select_cohort(size)`` requests: the engine clusters the table —
+    dense, Nyström, or mesh-sharded Nyström depending on N and devices —
+    and the cohort is drawn round-robin across clusters, de-biasing the
+    draw toward minority clusters exactly as the paper's Algorithm II
+    does for its DQN-chosen clusters.  Embedding updates only invalidate
+    the engine's exact-match cache; small drift keeps the warm-start
+    path, so steady-state request latency excludes landmark reselection
+    and cold eigensolves.
+    """
+
+    def __init__(self, num_clients: int, embed_dim: int, *,
+                 config=None, seed: int = 0):
+        from repro.cohort import CohortConfig, CohortEngine
+
+        self.embeds = np.zeros((num_clients, embed_dim), np.float32)
+        self.engine = CohortEngine(config or CohortConfig(), seed=seed)
+        self.rng = np.random.default_rng(seed)
+        self.last_select_s = 0.0
+
+    def update_embeddings(self, client_ids, new_embeds) -> None:
+        """Overwrite the embedding rows of ``client_ids`` in place."""
+        self.embeds[np.asarray(client_ids)] = np.asarray(
+            new_embeds, np.float32)
+
+    def select_cohort(self, cohort_size: int):
+        """Returns ``(client_ids (cohort_size,), CohortResult)``."""
+        t0 = time.perf_counter()
+        res = self.engine.select(self.embeds)
+        pools = [list(np.flatnonzero(res.assign == c))
+                 for c in range(res.k)]
+        for pool in pools:
+            self.rng.shuffle(pool)
+        picked: list = []
+        while len(picked) < cohort_size and any(pools):
+            for pool in pools:
+                if pool and len(picked) < cohort_size:
+                    picked.append(pool.pop())
+        self.last_select_s = time.perf_counter() - t0
+        return np.asarray(picked[:cohort_size]), res
+
+
+def _cohort_main(args) -> None:
+    """Cohort-service demo loop: N synthetic clients, drifting embeddings."""
+    from repro.cohort import CohortConfig
+
+    rng = np.random.default_rng(args.seed)
+    d = 8
+    centers = rng.normal(size=(args.num_clusters, d)).astype(np.float32) * 6
+    assign_true = rng.integers(0, args.num_clusters, args.cohort)
+    embeds = (centers[assign_true]
+              + rng.normal(size=(args.cohort, d)).astype(np.float32))
+    server = CohortServer(
+        args.cohort, d, seed=args.seed,
+        config=CohortConfig(num_clusters=args.num_clusters,
+                            landmarks=args.landmarks,
+                            num_landmarks=args.num_landmarks))
+    server.update_embeddings(np.arange(args.cohort), embeds)
+    for r in range(args.rounds):
+        ids, res = server.select_cohort(args.cohort_size)
+        # the selected cohort trains and drifts; everyone else is static
+        server.update_embeddings(
+            ids, server.embeds[ids]
+            + 0.01 * rng.normal(size=(len(ids), d)).astype(np.float32))
+        print(f"round {r}: {len(ids)} clients from {res.k} clusters "
+              f"({res.method}/{res.source}) in {server.last_select_s:.3f}s "
+              f"({args.cohort / max(server.last_select_s, 1e-9):,.0f} "
+              f"clients/s)")
+    print(f"engine stats: {server.engine.stats}")
+
+
 def main() -> None:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--arch", default="gemma-2b")
@@ -100,7 +186,20 @@ def main() -> None:
     ap.add_argument("--gen-len", type=int, default=32)
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--cohort", type=int, default=0, metavar="N",
+                    help="serve cohort selection for N clients instead "
+                         "of the LM loop")
+    ap.add_argument("--cohort-size", type=int, default=64)
+    ap.add_argument("--num-clusters", type=int, default=8)
+    ap.add_argument("--num-landmarks", type=int, default=None)
+    ap.add_argument("--landmarks", default="uniform",
+                    choices=["uniform", "leverage", "kmeans++"])
+    ap.add_argument("--rounds", type=int, default=5)
     args = ap.parse_args()
+
+    if args.cohort:
+        _cohort_main(args)
+        return
 
     from repro.configs import get_config
 

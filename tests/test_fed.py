@@ -66,6 +66,12 @@ def test_integration_rounds_improve_accuracy():
     hist = runner.run(8)
     assert hist[-1].accuracy > hist[0].accuracy + 0.2
     assert hist[-1].accuracy > 0.5
+    # per-phase perf_counter timings are recorded and sum to the round
+    for res in hist:
+        assert {"select", "train", "aggregate", "evaluate",
+                "update"} <= set(res.timings)
+        assert all(t >= 0 for t in res.timings.values())
+        assert abs(sum(res.timings.values()) - res.seconds) < 1e-3
 
 
 @pytest.mark.slow
