@@ -1,0 +1,61 @@
+"""CI docs check: every ```python snippet in the docs must run.
+
+Extracts fenced ```python blocks from README.md and docs/*.md and
+executes each in a fresh namespace (shared per file, so a later block
+can build on an earlier one's imports/variables).  Blocks that are
+illustrative-only can opt out with a first line of ``# doc-skip``.
+
+  PYTHONPATH=src python scripts/check_docs.py
+
+Exit status is nonzero on the first failing block; the failing file and
+block index are printed with the traceback.  tests/test_docs.py runs the
+same check inside the tier-1 suite.
+"""
+
+from __future__ import annotations
+
+import pathlib
+import re
+import sys
+import traceback
+
+REPO = pathlib.Path(__file__).resolve().parent.parent
+_BLOCK = re.compile(r"```python\n(.*?)```", re.S)
+
+
+def doc_files() -> list:
+    """README.md + every markdown file under docs/."""
+    files = [REPO / "README.md"]
+    files += sorted((REPO / "docs").glob("*.md"))
+    return [f for f in files if f.exists()]
+
+
+def run_file(path: pathlib.Path) -> int:
+    """Exec every non-skipped python block of one file; returns count."""
+    namespace = {"__name__": f"__docs_{path.stem}__"}
+    ran = 0
+    for i, block in enumerate(_BLOCK.findall(path.read_text())):
+        if block.lstrip().startswith("# doc-skip"):
+            continue
+        code = compile(block, f"{path.name}:block{i}", "exec")
+        exec(code, namespace)          # noqa: S102 — that's the point
+        ran += 1
+    return ran
+
+
+def main() -> int:
+    failures = 0
+    for path in doc_files():
+        try:
+            ran = run_file(path)
+        except Exception:
+            print(f"FAIL {path.relative_to(REPO)}")
+            traceback.print_exc()
+            failures += 1
+        else:
+            print(f"ok   {path.relative_to(REPO)} ({ran} snippets)")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -50,6 +50,19 @@ from repro.core.spectral import row_normalize
 _METHODS = ("auto", "dense", "nystrom", "sharded")
 _SKETCH_EPS = 1e-12
 
+# landmark-count autotuning (num_landmarks="auto"): relative eigengap
+# g = (λ_{k+1} − λ_k) / (λ_{k+1} − λ_1) — the share of the approximate
+# L_norm spectral spread concentrated in the k -> k+1 gap.  Empirically
+# (see docs/ARCHITECTURE.md) well-separated cohorts sit around 0.1 at
+# any sufficient m while unstructured/under-resolved kernels sit below
+# 0.01, so: below _GAP_WEAK the landmark set is judged too coarse (m
+# doubles); above _GAP_STRONG twice in a row, with only moderate drift,
+# it is judged wasteful (m halves toward the base).
+_GAP_WEAK = 0.02
+_GAP_STRONG = 0.08
+_AUTO_M_MAX_FACTOR = 8     # cap: 8x the static default, clipped to n
+_AUTO_M_DRIFT_FACTOR = 4   # shrink only when drift <= 4x drift_threshold
+
 
 @dataclasses.dataclass
 class CohortConfig:
@@ -57,7 +70,12 @@ class CohortConfig:
 
     num_clusters     — k: spectral-embedding width and DQN action count.
     method           — "auto" | "dense" | "nystrom" | "sharded".
-    num_landmarks    — m for the Nyström paths (default max(8k, 64)).
+    num_landmarks    — m for the Nyström paths: an int pins it, None
+                       uses the static default max(8k, 64), "auto"
+                       autotunes m between that default and 8x it from
+                       the drift sketch + relative-eigengap history
+                       (weak gap doubles m; two consecutive strong gaps
+                       under moderate drift halve it).
     landmarks        — "uniform" | "leverage" | "kmeans++" strategy.
     solver           — landmark eigenproblems: "auto" picks dense eigh
                        for m <= eigh_cutoff, blocked subspace iteration
@@ -76,7 +94,7 @@ class CohortConfig:
     """
     num_clusters: int = 8
     method: str = "auto"
-    num_landmarks: Optional[int] = None
+    num_landmarks: Optional[object] = None     # int | None | "auto"
     landmarks: str = "uniform"
     solver: str = "auto"
     dense_solver: str = "eigh"
@@ -101,6 +119,12 @@ class CohortConfig:
                 f"expected one of {LANDMARK_STRATEGIES}")
         if self.solver not in ("auto", "eigh", "subspace"):
             raise ValueError(f"unknown solver {self.solver!r}")
+        m = self.num_landmarks
+        if not (m is None or m == "auto"
+                or (isinstance(m, (int, np.integer)) and m > 0)):
+            raise ValueError(
+                f"num_landmarks={m!r} must be a positive int, None, "
+                f"or \"auto\"")
 
 
 @dataclasses.dataclass
@@ -157,6 +181,8 @@ class CohortEngine:
         self._sketch_seed = seed ^ 0x5EED
         self._mesh = mesh
         self.state = CohortState()
+        self._auto_m: Optional[int] = None     # autotuned landmark count
+        self._gap_hist: list = []              # relative eigengaps, cold solves
         self.stats = {"solves": 0, "cache_hits": 0, "warm_starts": 0,
                       "cold_starts": 0}
 
@@ -258,10 +284,12 @@ class CohortEngine:
 
         x = jnp.asarray(embeds)
         k = cfg.num_clusters
-        # auto_k needs the lambda_k/lambda_{k+1} gap, but the subspace
-        # solvers only return as many eigenvalues as the embedding width
-        # — so solve one wider and slice back after the eigengap choice.
-        solve_k = k + 1 if cfg.auto_k else k
+        # auto_k and landmark autotuning both need the lambda_k /
+        # lambda_{k+1} gap, but the subspace solvers only return as many
+        # eigenvalues as the embedding width — so solve one wider and
+        # slice back after the gap is read off.
+        widen = cfg.auto_k or (self._autotune_m and method != "dense")
+        solve_k = k + 1 if widen else k
         if method == "dense":
             y, evals = self._solve_dense(x, solve_k)
             source = "cold"
@@ -273,12 +301,16 @@ class CohortEngine:
             y, evals, source = self._solve_landmarks(
                 x, solve_k, method, drift, land_key, solve_key,
                 persist=persist)
+            if self._autotune_m and persist and source == "cold":
+                self._update_auto_m(n, k, drift, np.asarray(evals))
 
         k_hat = k
         if cfg.auto_k:
             k_hat = int(np.clip(
                 int(_spectral.eigengap_k(evals, k)), 2, k))
             y = row_normalize(y[:, :k_hat])
+        elif widen:
+            y = row_normalize(y[:, :k])
         assign, _ = kmeans(km_key, y, k_hat)
 
         result = CohortResult(
@@ -299,13 +331,59 @@ class CohortEngine:
         return _spectral.spectral_embedding(
             a, k, solver=self.config.dense_solver)
 
+    @property
+    def _autotune_m(self) -> bool:
+        return self.config.num_landmarks == "auto"
+
     def _num_landmarks(self, n: int, k: int) -> int:
-        m = self.config.num_landmarks or _spectral.default_num_landmarks(
-            n, k)
+        if self._autotune_m:
+            # base off the configured cluster count, NOT the (possibly
+            # k+1-widened) solve width, so the recorded _auto_m always
+            # equals the m actually solved with — otherwise the next
+            # round's warm-start size check can never match
+            m = self._auto_m or _spectral.default_num_landmarks(
+                n, self.config.num_clusters)
+        else:
+            m = (self.config.num_landmarks
+                 or _spectral.default_num_landmarks(n, k))
         m = min(int(m), n)
         if m < k:
             raise ValueError(f"num_landmarks={m} must be >= k={k}")
         return m
+
+    def _update_auto_m(self, n: int, k: int, drift: float,
+                       evals: np.ndarray) -> None:
+        """Adapt the landmark count from eigengap + drift evidence.
+
+        Called after every COLD landmark solve (warm solves must keep m
+        fixed — the warm-start check requires the persisted landmark set
+        to match).  The solve is run one eigenvector wide (k+1) so the
+        relative gap  g = (λ_{k+1} − λ_k)/(λ_{k+1} − λ_1)  of the
+        approximate L_norm spectrum is observable: a weak gap means the
+        Nyström approximation is not resolving the k-cluster structure,
+        so m doubles (up to 8x the static default); two consecutive
+        strong gaps under moderate sketch drift mean the kernel is over-
+        resolved, so m halves back toward the default.
+        """
+        evals = np.asarray(evals)
+        if len(evals) <= k:           # no λ_{k+1}: nothing to measure
+            return
+        lo, hi = float(evals[k - 1]), float(evals[k])
+        gap = max(hi - lo, 0.0) / max(hi - float(evals[0]), _SKETCH_EPS)
+        self._gap_hist.append(gap)
+        base = _spectral.default_num_landmarks(n, k)
+        cap = min(n, _AUTO_M_MAX_FACTOR * base)
+        m = self._auto_m or base
+        if gap < _GAP_WEAK:
+            m = min(cap, 2 * m)
+        elif (len(self._gap_hist) >= 2
+              and min(self._gap_hist[-2:]) > _GAP_STRONG
+              and np.isfinite(drift)
+              and drift <= _AUTO_M_DRIFT_FACTOR
+              * self.config.drift_threshold):
+            m = max(base, m // 2)
+        self._auto_m = m
+        self.stats["auto_m"] = m
 
     def _solve_landmarks(self, x, k: int, method: str, drift: float,
                          land_key, solve_key, *, persist: bool = True):

@@ -131,8 +131,11 @@ class DQREScSelection(SelectionPolicy):
     subsystem: a :class:`repro.cohort.CohortEngine` owns method
     resolution (dense / Nyström / mesh-sharded Nyström), landmark
     strategy, the per-round fingerprint cache, and drift-gated
-    warm-started re-clustering.  This policy keeps only Algorithm II:
-    the cluster-level DQN and the cohort draw.
+    warm-started re-clustering.  Algorithm II (the cluster-level DQN
+    and the ε-greedy cohort draw) is delegated to
+    :class:`repro.policy.ClusterPolicy` — the same component the
+    serving path (``launch/serve.CohortServer``) runs online — fed here
+    with the simulation state [global embed ‖ cluster centroids].
     """
     name = "dqre_sc"
 
@@ -179,10 +182,11 @@ class DQREScSelection(SelectionPolicy):
                     f"it — an explicit cohort_config replaces those "
                     f"constructor arguments entirely")
         self.engine = CohortEngine(cohort_config, seed=seed + 1)
-        cfg = DQNConfig(state_dim=(num_clusters + 1) * embed_dim,
-                        num_actions=num_clusters,
-                        **(dqn_overrides or {}))
-        self.agent = DQNAgent(jax.random.PRNGKey(seed), cfg)
+        from repro.policy import ClusterPolicy
+        self.cluster_policy = ClusterPolicy(
+            num_clusters, state_dim=(num_clusters + 1) * embed_dim,
+            seed=seed, dqn_overrides=dqn_overrides)
+        self.agent = self.cluster_policy.agent   # back-compat alias
         self._last_assign: Optional[np.ndarray] = None
         self._last_state_vec: Optional[np.ndarray] = None
         self._last_actions: Optional[list] = None
@@ -210,38 +214,20 @@ class DQREScSelection(SelectionPolicy):
         assign = self._cluster(state.client_embeds)
         s = self._state_vec(state, assign)
         self._last_assign, self._last_state_vec = assign, s
-        self.agent.steps += 1
-        q = self.agent.q_values(s)
-        eps = self.agent.epsilon()
-
         pools = {c: list(np.flatnonzero(assign == c))
                  for c in range(self.num_clusters)}
-        for pool in pools.values():
-            self.rng.shuffle(pool)
-        picked, actions = [], []
-        order = np.argsort(-q)
-        while len(picked) < self.clients_per_round:
-            if self.rng.random() < eps:
-                c = int(self.rng.integers(self.num_clusters))
-            else:
-                c = int(next((c for c in order if pools[c]), order[0]))
-            if not pools[c]:
-                nonempty = [cc for cc in range(self.num_clusters) if pools[cc]]
-                if not nonempty:
-                    break
-                c = int(self.rng.choice(nonempty))
-            picked.append(pools[c].pop())
-            actions.append(c)
+        picked, actions = self.cluster_policy.draw(
+            self.rng, s, pools, self.clients_per_round)
         self._last_actions = actions
         return np.asarray(picked)
 
     def update(self, state, next_state, feedback):
         assign2 = self._cluster(next_state.client_embeds)
         s2 = self._state_vec(next_state, assign2)
-        for a in (self._last_actions or []):
-            self.agent.observe(self._last_state_vec, int(a),
-                               feedback.reward, s2)
-        self.agent.train_step(self.rng)
+        self.cluster_policy.observe(self._last_state_vec,
+                                    self._last_actions or [],
+                                    feedback.reward, s2)
+        self.cluster_policy.train(self.rng)
 
 
 POLICIES = {

@@ -1,13 +1,49 @@
-"""Evaluation criteria for the paper's Table 3.
+"""Evaluation criteria for the paper's Table 3, plus serving-state stats.
 
 Balanced accuracy, accuracy, macro recall, Cohen's kappa, macro one-vs-rest
 AUC (rank-based, no sklearn), plus the "feature rate" (the paper's term;
 we read it as macro precision, the closest standard quantity).
+
+Also home to :func:`cluster_policy_state` — the per-cluster
+participation/accuracy statistics the serving path feeds the DQN policy
+(``repro.policy.ClusterPolicy``) as its state vector.
 """
 
 from __future__ import annotations
 
 import numpy as np
+
+
+def cluster_policy_state(assign: np.ndarray, k: int,
+                         participation: np.ndarray,
+                         reward_ema: np.ndarray,
+                         prev_accuracy: float) -> np.ndarray:
+    """Serving-side DQN state: per-cluster stats + last global accuracy.
+
+    Args:
+        assign:        (n,) cluster ids in [0, k) from Algorithm I.
+        k:             number of clusters (the DQN action count).
+        participation: (k,) cumulative count of cohort slots served from
+                       each cluster so far.
+        reward_ema:    (k,) exponential moving average of the round
+                       reward credited to draws from each cluster.
+        prev_accuracy: global-model accuracy after the last round.
+
+    Returns:
+        (3k + 1,) float32 vector ``[population_frac ‖ participation_frac
+        ‖ reward_ema ‖ prev_accuracy]`` — population fraction is each
+        cluster's share of clients, participation fraction its share of
+        all slots served (uniform 1/k before any draw, so round 0 is not
+        a degenerate all-zeros state).
+    """
+    n = max(len(assign), 1)
+    pop = np.bincount(np.asarray(assign), minlength=k)[:k] / n
+    participation = np.asarray(participation, np.float64)[:k]
+    total = participation.sum()
+    part = (participation / total) if total > 0 else np.full(k, 1.0 / k)
+    return np.concatenate(
+        [pop, part, np.asarray(reward_ema, np.float64)[:k],
+         [prev_accuracy]]).astype(np.float32)
 
 
 def confusion(y_true: np.ndarray, y_pred: np.ndarray, k: int) -> np.ndarray:

@@ -64,6 +64,12 @@ class RunnerConfig:
     num_landmarks: Optional[int] = None    # Nyström landmark count (m ≪ N)
     landmarks: str = "uniform"             # "uniform" | "leverage" | "kmeans++"
     warm_start: bool = True                # drift-gated re-clustering
+    # ε-greedy exploration schedule of the learning policies (favor /
+    # dqre_sc): linear decay eps_start -> eps_end over eps_decay_steps
+    # rounds.  Explicit dqn_overrides in policy_kwargs win over these.
+    eps_start: float = 1.0
+    eps_end: float = 0.05
+    eps_decay_steps: int = 200
     policy_kwargs: Optional[dict] = None
 
 
@@ -99,6 +105,11 @@ class FederatedRunner:
             kw.setdefault("num_landmarks", cfg.num_landmarks)
             kw.setdefault("landmarks", cfg.landmarks)
             kw.setdefault("warm_start", cfg.warm_start)
+        if cfg.policy in ("dqre_sc", "favor"):
+            sched = dict(eps_start=cfg.eps_start, eps_end=cfg.eps_end,
+                         eps_decay_steps=cfg.eps_decay_steps)
+            sched.update(kw.get("dqn_overrides") or {})
+            kw["dqn_overrides"] = sched
         self.policy = make_policy(cfg.policy, cfg.num_clients,
                                   cfg.clients_per_round, cfg.embed_dim,
                                   seed=cfg.seed, **kw)

@@ -10,20 +10,28 @@ long_500k.
       --batch 4 --prompt-len 32 --gen-len 32
 
 ``CohortServer`` is the federated control-plane counterpart: it owns the
-live client-embedding table and a ``repro.cohort.CohortEngine``, and
-answers cohort requests with a cluster-stratified draw.  Because the
+live client-embedding table (versioned, copy-on-write, so embedding
+updates never tear a concurrent selection) and a
+``repro.cohort.CohortEngine``, and answers cohort requests either with a
+cluster-stratified draw (``policy="stratified"``) or with the paper's
+Algorithm II (``policy="dqn"``): a :class:`repro.policy.ClusterPolicy`
+scores the clusters and draws the cohort ε-greedily, trained online from
+the accuracy signal reported back via ``observe_round``.  Because the
 engine warm-starts and fingerprint-caches between requests, steady-state
 selection cost is dominated by the (N, m) cross-affinity — sharded over
-the cohort mesh when more than one device is visible.
+the cohort mesh when more than one device is visible.  ``stats()``
+exposes the whole serving picture: engine cache/warm/cold counters,
+per-phase latencies, table version, and the policy's ε / replay fill.
 
   PYTHONPATH=src python -m repro.launch.serve --cohort 100000 \
-      --cohort-size 64 --landmarks kmeans++ --rounds 5
+      --cohort-size 64 --landmarks kmeans++ --policy dqn --rounds 5
 """
 
 from __future__ import annotations
 
 import argparse
 import dataclasses
+import threading
 import time
 from typing import List, Optional
 
@@ -102,6 +110,13 @@ class Server:
         return [r for r in requests if r.uid >= 0]
 
 
+#: smoothing factor for the server's per-phase latency EMAs.
+_LATENCY_EMA = 0.2
+#: smoothing factor for the per-cluster reward EMAs in the policy state
+#: (independent knob from the latency smoothing; they just share a value).
+_REWARD_EMA = 0.2
+
+
 class CohortServer:
     """Cohort-selection service backed by a :class:`CohortEngine`.
 
@@ -109,47 +124,259 @@ class CohortServer:
     deltas stream in via ``update_embeddings``) and serves
     ``select_cohort(size)`` requests: the engine clusters the table —
     dense, Nyström, or mesh-sharded Nyström depending on N and devices —
-    and the cohort is drawn round-robin across clusters, de-biasing the
-    draw toward minority clusters exactly as the paper's Algorithm II
-    does for its DQN-chosen clusters.  Embedding updates only invalidate
-    the engine's exact-match cache; small drift keeps the warm-start
-    path, so steady-state request latency excludes landmark reselection
-    and cold eigensolves.
+    and the cohort is drawn from the clusters by the configured policy:
+
+    * ``policy="stratified"`` — round-robin across clusters, the
+      uniform de-biasing draw.
+    * ``policy="dqn"`` — the paper's Algorithm II: a
+      :class:`repro.policy.ClusterPolicy` (cluster-level Deep-Q agent)
+      chooses the cluster for every cohort slot ε-greedily; callers
+      report each round's resulting accuracy via :meth:`observe_round`,
+      which shapes the reward (FAVOR's ``Ξ^(acc − target) − 1``),
+      updates the replay buffer, and takes one TD training step — the
+      policy learns online which clusters to favor while serving.
+
+    Concurrency: the embedding table is **versioned copy-on-write** —
+    ``update_embeddings`` builds a fresh table and swaps the reference
+    under a writer lock, while ``select_cohort`` snapshots the current
+    reference, so a selection in flight always clusters one internally
+    consistent table (never a half-updated one).  Selections themselves
+    are serialized on a second lock because the engine's warm-start
+    state is single-writer.  Embedding updates only invalidate the
+    engine's exact-match cache; small drift keeps the warm-start path,
+    so steady-state request latency excludes landmark reselection and
+    cold eigensolves.
+
+    Args:
+        num_clients:  N, rows of the embedding table.
+        embed_dim:    d, embedding width.
+        config:       :class:`repro.cohort.CohortConfig` for the engine.
+        seed:         seeds the engine, the draw rng, and the Q-network.
+        policy:       "stratified" | "dqn".
+        target_accuracy: reward pivot for the DQN policy's shaping.
+        dqn_overrides: DQNConfig field overrides for ``policy="dqn"``.
     """
 
+    POLICIES = ("stratified", "dqn")
+
     def __init__(self, num_clients: int, embed_dim: int, *,
-                 config=None, seed: int = 0):
+                 config=None, seed: int = 0, policy: str = "stratified",
+                 target_accuracy: float = 0.85,
+                 dqn_overrides: Optional[dict] = None):
         from repro.cohort import CohortConfig, CohortEngine
 
-        self.embeds = np.zeros((num_clients, embed_dim), np.float32)
-        self.engine = CohortEngine(config or CohortConfig(), seed=seed)
+        if policy not in self.POLICIES:
+            raise ValueError(f"unknown policy {policy!r}; "
+                             f"expected one of {self.POLICIES}")
+        self.config = config or CohortConfig()
+        self.engine = CohortEngine(self.config, seed=seed)
         self.rng = np.random.default_rng(seed)
+        self.policy_name = policy
+        self.target_accuracy = target_accuracy
+        k = self.config.num_clusters
+        if policy == "dqn":
+            from repro.policy import ClusterPolicy
+            # serving state = cluster_policy_state(): 3 stats per
+            # cluster (population / participation / reward EMA) + the
+            # last reported global accuracy
+            self.policy = ClusterPolicy(k, state_dim=3 * k + 1, seed=seed,
+                                        dqn_overrides=dqn_overrides)
+        else:
+            self.policy = None
+
+        table = np.zeros((num_clients, embed_dim), np.float32)
+        table.setflags(write=False)       # snapshots must stay immutable
+        self._snap = (0, table)           # (version, table), swapped whole
+        self._write_lock = threading.Lock()
+        self._select_lock = threading.Lock()
+
+        self._participation = np.zeros(k, np.float64)
+        self._reward_ema = np.zeros(k, np.float32)
+        self.prev_accuracy = 0.0
+        self._pending = None              # (state_vec, actions, assign)
+        self._latency = {"solve_s": 0.0, "draw_s": 0.0, "total_s": 0.0}
+        self._round_timings: dict = {}    # running means per phase
+        self._counters = {"requests": 0, "updates": 0, "rounds_observed": 0,
+                          "dropped_transitions": 0}
         self.last_select_s = 0.0
 
+    # -- embedding table (versioned copy-on-write) -----------------------
+    @property
+    def embeds(self) -> np.ndarray:
+        """Current (read-only) embedding-table snapshot."""
+        return self._snap[1]
+
+    @property
+    def version(self) -> int:
+        """Table version; bumps on every ``update_embeddings``."""
+        return self._snap[0]
+
+    def snapshot(self):
+        """Atomically read ``(version, table)``; the table is immutable."""
+        # the (version, table) pair is swapped as one tuple, so a single
+        # reference read can never pair a stale version with a new table
+        return self._snap
+
     def update_embeddings(self, client_ids, new_embeds) -> None:
-        """Overwrite the embedding rows of ``client_ids`` in place."""
-        self.embeds[np.asarray(client_ids)] = np.asarray(
-            new_embeds, np.float32)
+        """Replace the embedding rows of ``client_ids``.
+
+        Copy-on-write: readers holding the previous snapshot are
+        unaffected; the new (version, table) pair becomes visible
+        atomically.
+        """
+        ids = np.asarray(client_ids)
+        rows = np.asarray(new_embeds, np.float32)
+        with self._write_lock:
+            version, table = self._snap
+            table = table.copy()
+            table[ids] = rows
+            table.setflags(write=False)
+            self._snap = (version + 1, table)
+            self._counters["updates"] += 1
+
+    # -- serving ----------------------------------------------------------
+    def _ema(self, name: str, value: float) -> None:
+        prev = self._latency[name]
+        self._latency[name] = (value if self._counters["requests"] == 0
+                               else prev + _LATENCY_EMA * (value - prev))
+
+    def _policy_state(self, assign: np.ndarray) -> np.ndarray:
+        from repro.fed.metrics import cluster_policy_state
+        return cluster_policy_state(assign, self.config.num_clusters,
+                                    self._participation, self._reward_ema,
+                                    self.prev_accuracy)
 
     def select_cohort(self, cohort_size: int):
-        """Returns ``(client_ids (cohort_size,), CohortResult)``."""
-        t0 = time.perf_counter()
-        res = self.engine.select(self.embeds)
-        pools = [list(np.flatnonzero(res.assign == c))
-                 for c in range(res.k)]
-        for pool in pools:
-            self.rng.shuffle(pool)
-        picked: list = []
-        while len(picked) < cohort_size and any(pools):
-            for pool in pools:
-                if pool and len(picked) < cohort_size:
-                    picked.append(pool.pop())
-        self.last_select_s = time.perf_counter() - t0
-        return np.asarray(picked[:cohort_size]), res
+        """Serve one cohort; returns ``(client_ids, CohortResult)``.
+
+        ``client_ids`` has ``cohort_size`` entries unless the table has
+        fewer clients.  With ``policy="dqn"`` the draw's (state,
+        actions) pair is parked until :meth:`observe_round` reports the
+        round's accuracy.
+        """
+        with self._select_lock:
+            t0 = time.perf_counter()
+            _, table = self.snapshot()
+            res = self.engine.select(table)
+            t_solve = time.perf_counter()
+            k = self.config.num_clusters
+            pools = {c: list(np.flatnonzero(res.assign == c))
+                     for c in range(k)}
+            if self.policy is not None:
+                state = self._policy_state(res.assign)
+                picked, actions = self.policy.draw(
+                    self.rng, state, pools, cohort_size)
+                if self._pending is not None:
+                    # the serve contract is select -> observe_round ->
+                    # select; a second select before the round report
+                    # replaces the parked transition, and the earlier
+                    # draw is never learned from — count it so the
+                    # dashboard can see mis-sequenced callers
+                    self._counters["dropped_transitions"] += 1
+                self._pending = (state, actions, res.assign)
+            else:
+                for pool in pools.values():
+                    self.rng.shuffle(pool)
+                ordered = [pools[c] for c in range(res.k)]
+                picked = []
+                while len(picked) < cohort_size and any(ordered):
+                    for pool in ordered:
+                        if pool and len(picked) < cohort_size:
+                            picked.append(pool.pop())
+            picked = np.asarray(picked[:cohort_size], np.int64)
+            if len(picked):
+                np.add.at(self._participation, res.assign[picked], 1.0)
+            t1 = time.perf_counter()
+            self._ema("solve_s", t_solve - t0)
+            self._ema("draw_s", t1 - t_solve)
+            self._ema("total_s", t1 - t0)
+            self._counters["requests"] += 1
+            self.last_select_s = t1 - t0
+            return picked, res
+
+    def observe_round(self, accuracy: float, timings: Optional[dict] = None,
+                      ) -> float:
+        """Report a completed round back to the server; returns the reward.
+
+        ``accuracy`` is the post-aggregation global-model accuracy of
+        the round trained on the last served cohort; the reward is the
+        paper's shaping ``Ξ^(acc − target) − 1``.  With ``policy="dqn"``
+        this is the online learning step: the parked (state, actions)
+        from :meth:`select_cohort` plus the new state go into the replay
+        buffer and one TD minibatch runs.  ``timings`` (e.g.
+        ``RoundResult.timings`` from ``repro.fed.rounds``) is folded
+        into the per-phase running means reported by :meth:`stats`.
+        """
+        from repro.core.selection import favor_reward
+
+        reward = favor_reward(accuracy, self.target_accuracy)
+        # same lock as select_cohort: a racing selection must not park a
+        # new (state, actions) transition between our read of _pending
+        # and its clear, or that round's learning step would be dropped
+        with self._select_lock:
+            if self.policy is not None and self._pending is not None:
+                state, actions, assign = self._pending
+                for c in set(actions):
+                    self._reward_ema[c] += _REWARD_EMA * (
+                        reward - self._reward_ema[c])
+                self.prev_accuracy = accuracy
+                next_state = self._policy_state(assign)
+                self.policy.observe(state, actions, reward, next_state)
+                self.policy.train(self.rng)
+                self._pending = None
+            else:
+                self.prev_accuracy = accuracy
+            if timings:
+                n = self._counters["rounds_observed"]
+                for phase, seconds in timings.items():
+                    prev = self._round_timings.get(phase, 0.0)
+                    self._round_timings[phase] = (
+                        prev + (seconds - prev) / (n + 1))
+            self._counters["rounds_observed"] += 1
+        return reward
+
+    def stats(self) -> dict:
+        """One dict for the serving dashboard: engine, latency, policy.
+
+        Keys: ``requests`` / ``updates`` / ``rounds_observed`` /
+        ``dropped_transitions`` counters (the last counts DQN draws
+        replaced by a second ``select_cohort`` before their round was
+        reported — mis-sequenced callers),
+        ``table_version``, ``num_clients``, ``engine`` (cache hits,
+        warm/cold starts, solves, autotuned ``auto_m`` when enabled),
+        ``latency_s`` (EMA solve/draw/total), ``round_timings_s``
+        (running means of ingested ``RoundResult.timings`` phases),
+        ``last_select`` (method/source/drift/k of the latest solve), and
+        ``policy`` (kind plus ε / steps / replay fill for "dqn").
+        """
+        last = self.engine.state.result
+        policy = {"kind": self.policy_name}
+        if self.policy is not None:
+            policy.update(self.policy.stats())
+        return {
+            **dict(self._counters),
+            "table_version": self.version,
+            "num_clients": self.embeds.shape[0],
+            "engine": dict(self.engine.stats),
+            "latency_s": dict(self._latency),
+            "round_timings_s": dict(self._round_timings),
+            "last_select": None if last is None else {
+                "method": last.method, "source": last.source,
+                "drift": last.drift, "k": last.k,
+                "seconds": last.seconds},
+            "policy": policy,
+        }
 
 
 def _cohort_main(args) -> None:
-    """Cohort-service demo loop: N synthetic clients, drifting embeddings."""
+    """Cohort-service demo loop: N synthetic clients, drifting embeddings.
+
+    With ``--policy dqn`` the loop also synthesizes a reward signal:
+    clients of true cluster 0 are "stale" (contribute nothing), so round
+    accuracy rises with the fraction of the cohort drawn outside it —
+    over a few dozen rounds the policy's draw weights visibly shift away
+    from the engine cluster covering that group.
+    """
     from repro.cohort import CohortConfig
 
     rng = np.random.default_rng(args.seed)
@@ -158,14 +385,22 @@ def _cohort_main(args) -> None:
     assign_true = rng.integers(0, args.num_clusters, args.cohort)
     embeds = (centers[assign_true]
               + rng.normal(size=(args.cohort, d)).astype(np.float32))
+    num_landmarks = args.num_landmarks
+    if num_landmarks not in (None, "auto"):
+        num_landmarks = int(num_landmarks)
     server = CohortServer(
-        args.cohort, d, seed=args.seed,
+        args.cohort, d, seed=args.seed, policy=args.policy,
+        target_accuracy=0.85,
         config=CohortConfig(num_clusters=args.num_clusters,
                             landmarks=args.landmarks,
-                            num_landmarks=args.num_landmarks))
+                            num_landmarks=num_landmarks))
     server.update_embeddings(np.arange(args.cohort), embeds)
     for r in range(args.rounds):
         ids, res = server.select_cohort(args.cohort_size)
+        # synthetic round outcome: cohort quality = share of non-stale
+        # clients (true cluster 0 is stale), reported back to the policy
+        useful = float(np.mean(assign_true[ids] != 0)) if len(ids) else 0.0
+        reward = server.observe_round(0.5 + 0.4 * useful)
         # the selected cohort trains and drifts; everyone else is static
         server.update_embeddings(
             ids, server.embeds[ids]
@@ -173,8 +408,10 @@ def _cohort_main(args) -> None:
         print(f"round {r}: {len(ids)} clients from {res.k} clusters "
               f"({res.method}/{res.source}) in {server.last_select_s:.3f}s "
               f"({args.cohort / max(server.last_select_s, 1e-9):,.0f} "
-              f"clients/s)")
-    print(f"engine stats: {server.engine.stats}")
+              f"clients/s, reward {reward:+.3f})")
+    import json
+    print("server stats:", json.dumps(server.stats(), indent=2,
+                                      default=float))
 
 
 def main() -> None:
@@ -191,9 +428,15 @@ def main() -> None:
                          "of the LM loop")
     ap.add_argument("--cohort-size", type=int, default=64)
     ap.add_argument("--num-clusters", type=int, default=8)
-    ap.add_argument("--num-landmarks", type=int, default=None)
+    ap.add_argument("--num-landmarks", default=None,
+                    help="Nyström landmark count: an int, or 'auto' to "
+                         "autotune from the eigengap/drift history")
     ap.add_argument("--landmarks", default="uniform",
                     choices=["uniform", "leverage", "kmeans++"])
+    ap.add_argument("--policy", default="stratified",
+                    choices=["stratified", "dqn"],
+                    help="cohort draw: uniform stratified, or the "
+                         "paper's cluster-level DQN (Algorithm II)")
     ap.add_argument("--rounds", type=int, default=5)
     args = ap.parse_args()
 

@@ -1,0 +1,150 @@
+"""Algorithm II as a reusable component: a Deep-Q policy over clusters.
+
+The paper's hybrid loop is  *cluster the clients spectrally (Algorithm
+I), then let a Deep-Q agent decide which clusters this round's cohort is
+drawn from (Algorithm II)*.  Before this module existed, Algorithm II
+lived inline in ``core/selection.DQREScSelection`` and could only run
+inside a simulated :class:`repro.fed.FederatedRunner`; the serving path
+(``launch/serve.CohortServer``) fell back to uniform stratified draws.
+
+:class:`ClusterPolicy` extracts the DQN half into a state-agnostic
+component shared by both callers:
+
+* ``DQREScSelection`` feeds it the *simulation* state (global-model
+  embedding ‖ cluster centroids) each round.
+* ``CohortServer`` feeds it the *serving* state (per-cluster
+  population / participation / reward statistics built by
+  :func:`repro.fed.metrics.cluster_policy_state`) and trains it online
+  from the accuracy signal of completed rounds.
+
+The action space is the cluster index: one ε-greedy cluster choice per
+cohort slot, so a round's recorded ``actions`` are the per-slot cluster
+draws and the induced per-cluster draw weights are
+``ε/k + (1-ε)·1[argmax Q]`` (see :meth:`ClusterPolicy.draw_weights`).
+The reward is the paper's accuracy-delta signal
+``Ξ^(acc − target) − 1`` (FAVOR shaping, §3.3), computed by the caller.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+
+from repro.core.dqn import DQNAgent, DQNConfig
+
+
+class ClusterPolicy:
+    """Deep-Q policy over ``num_clusters`` discrete cluster actions.
+
+    Wraps a :class:`repro.core.dqn.DQNAgent` (current + target nets,
+    uniform replay, ε-greedy) with the cohort-draw loop of Algorithm II.
+    The policy is state-agnostic: callers build their own ``(state_dim,)``
+    float32 state vectors and pass them to :meth:`draw` / :meth:`observe`.
+
+    Args:
+        num_clusters: size of the action space (k of Algorithm I).
+        state_dim:    length of the caller's state vectors.
+        seed:         PRNG seed for the Q-network init and the fallback rng.
+        dqn_overrides: optional :class:`~repro.core.dqn.DQNConfig` field
+            overrides (e.g. ``{"eps_decay_steps": 50, "hidden": (32,)}``).
+    """
+
+    def __init__(self, num_clusters: int, state_dim: int, *, seed: int = 0,
+                 dqn_overrides: Optional[dict] = None):
+        self.num_clusters = num_clusters
+        cfg = DQNConfig(state_dim=state_dim, num_actions=num_clusters,
+                        **(dqn_overrides or {}))
+        self.agent = DQNAgent(jax.random.PRNGKey(seed), cfg)
+        self.rng = np.random.default_rng(seed)
+        self.last_loss = 0.0
+
+    # -- acting -----------------------------------------------------------
+    def epsilon(self) -> float:
+        """Current exploration rate of the underlying agent's schedule."""
+        return self.agent.epsilon()
+
+    def draw_weights(self, state_vec: np.ndarray) -> np.ndarray:
+        """Expected per-cluster draw distribution at the current ε.
+
+        Returns the (num_clusters,) marginal probability that a single
+        cohort slot is drawn from each cluster, ignoring pool depletion:
+        ``ε/k`` everywhere plus ``1-ε`` on the greedy (argmax-Q) cluster.
+        Pure readout — does not advance the ε schedule.
+        """
+        q = self.agent.q_values(np.asarray(state_vec, np.float32))
+        k = self.num_clusters
+        eps = self.agent.epsilon()
+        w = np.full(k, eps / k, np.float64)
+        w[int(np.argmax(q))] += 1.0 - eps
+        return w
+
+    def draw(self, rng: np.random.Generator, state_vec: np.ndarray,
+             pools: Dict[int, List[int]], cohort_size: int,
+             ) -> Tuple[List[int], List[int]]:
+        """Draw a cohort: one ε-greedy cluster choice per slot.
+
+        Args:
+            rng:       caller's generator (shuffles pools + exploration).
+            state_vec: (state_dim,) state the Q function scores.
+            pools:     cluster id -> mutable list of member client ids;
+                       drawn clients are popped (no replacement).  Keys
+                       must cover ``range(num_clusters)``; empty lists
+                       mark clusters with no members (e.g. above the
+                       engine's eigengap k̂).
+            cohort_size: number of clients to draw.
+
+        Returns:
+            ``(picked, actions)`` — client ids (≤ cohort_size if the
+            pools run dry) and the cluster chosen for each slot.
+            Advances the agent's ε schedule by one step.
+        """
+        self.agent.steps += 1
+        q = self.agent.q_values(np.asarray(state_vec, np.float32))
+        eps = self.agent.epsilon()
+        for pool in pools.values():
+            rng.shuffle(pool)
+        order = np.argsort(-q)
+        picked: List[int] = []
+        actions: List[int] = []
+        while len(picked) < cohort_size:
+            if rng.random() < eps:
+                c = int(rng.integers(self.num_clusters))
+            else:
+                c = int(next((c for c in order if pools[c]), order[0]))
+            if not pools[c]:
+                nonempty = [cc for cc in range(self.num_clusters)
+                            if pools[cc]]
+                if not nonempty:
+                    break
+                c = int(rng.choice(nonempty))
+            picked.append(pools[c].pop())
+            actions.append(c)
+        return picked, actions
+
+    # -- learning ---------------------------------------------------------
+    def observe(self, state_vec: np.ndarray, actions: Sequence[int],
+                reward: float, next_state_vec: np.ndarray) -> None:
+        """Record one round: every slot's cluster choice shares the
+        round's scalar reward (the paper credits all "rewarded users")."""
+        s = np.asarray(state_vec, np.float32)
+        s2 = np.asarray(next_state_vec, np.float32)
+        for a in actions:
+            self.agent.observe(s, int(a), reward, s2)
+
+    def train(self, rng: Optional[np.random.Generator] = None) -> float:
+        """One TD minibatch step; returns (and remembers) the loss."""
+        self.last_loss = self.agent.train_step(
+            rng if rng is not None else self.rng)
+        return self.last_loss
+
+    def stats(self) -> dict:
+        """Serving-dashboard counters: ε, steps, replay fill, last loss."""
+        buf = self.agent.buffer
+        return {"epsilon": self.agent.epsilon(),
+                "steps": self.agent.steps,
+                "train_calls": self.agent.train_calls,
+                "buffer_fill": buf.size / buf.capacity,
+                "buffer_size": buf.size,
+                "last_loss": self.last_loss}

@@ -377,3 +377,84 @@ def test_runner_config_threads_cohort_knobs():
     assert eng_cfg.landmarks == "kmeans++"
     assert eng_cfg.num_landmarks == 8
     assert eng_cfg.warm_start is False
+
+
+# -- landmark-count autotuning (num_landmarks="auto") -------------------
+def test_config_rejects_bogus_num_landmarks():
+    with pytest.raises(ValueError, match="num_landmarks"):
+        CohortConfig(num_landmarks="bogus")
+    with pytest.raises(ValueError, match="num_landmarks"):
+        CohortConfig(num_landmarks=-4)
+
+
+def test_auto_landmarks_keeps_base_on_separated_blobs():
+    """Strong eigengap -> the static default max(8k, 64) is enough; the
+    autotuner must not inflate m (and the result stays valid)."""
+    from repro.core.spectral import default_num_landmarks
+    x, labels = blobs()
+    eng = CohortEngine(CohortConfig(num_clusters=4, method="nystrom",
+                                    num_landmarks="auto"), seed=0)
+    res = eng.select(x)
+    assert res.assign.shape == (len(x),)
+    assert purity(res.assign, labels) >= 0.9
+    assert eng.stats["auto_m"] == default_num_landmarks(len(x), 4)
+    # the widened (k+1) solve is an internal detail: the published
+    # embedding keeps the configured k columns
+    assert res.embedding.shape[1] == 4
+
+
+def test_auto_landmarks_grows_on_weak_eigengap():
+    """Structureless embeddings show no k-cluster gap -> the autotuner
+    doubles m (bounded) on consecutive cold solves."""
+    from repro.core.spectral import default_num_landmarks
+    rng = np.random.default_rng(0)
+    base = default_num_landmarks(400, 4)
+    eng = CohortEngine(CohortConfig(num_clusters=4, method="nystrom",
+                                    num_landmarks="auto",
+                                    warm_start=False), seed=0)
+    for _ in range(2):
+        eng.select(rng.normal(size=(400, 8)).astype(np.float32))
+    assert eng.stats["auto_m"] > base
+    assert eng.stats["auto_m"] <= 8 * base
+
+
+def test_auto_landmarks_stable_under_warm_starts():
+    """Warm solves must not retune m (the warm-start check requires the
+    persisted landmark set to keep its size)."""
+    x, _ = blobs()
+    rng = np.random.default_rng(3)
+    eng = CohortEngine(CohortConfig(num_clusters=4, method="nystrom",
+                                    num_landmarks="auto",
+                                    drift_threshold=0.1), seed=0)
+    eng.select(x)
+    m0 = eng.stats["auto_m"]
+    r = eng.select(x + 0.01 * rng.normal(size=x.shape).astype(np.float32))
+    assert r.source == "warm"
+    assert eng.stats["auto_m"] == m0
+
+
+def test_auto_landmarks_bases_m_on_configured_k():
+    """Regression: the widened (k+1) solve must base m on the configured
+    k, not the solve width — at num_clusters=9 the k+1 base made the
+    first solve use 80 landmarks while auto_m recorded 72, so the
+    warm-start size check could never match and every solve ran cold."""
+    from repro.core.spectral import default_num_landmarks
+    x, _ = blobs(n=300, k=8)
+    rng = np.random.default_rng(5)
+    eng = CohortEngine(CohortConfig(num_clusters=9, method="nystrom",
+                                    num_landmarks="auto",
+                                    drift_threshold=0.1), seed=0)
+    eng.select(x)
+    assert len(eng.state.landmark_idx) == default_num_landmarks(300, 9)
+    # invariant: auto_m is always the m the NEXT solve actually uses,
+    # even while the weak-gap escalation is doubling it
+    for _ in range(3):
+        m_next = eng.stats["auto_m"]
+        x = x + 0.005 * rng.normal(size=x.shape).astype(np.float32)
+        eng.select(x)
+        assert len(eng.state.landmark_idx) == m_next
+    # once m stops moving (capped or strong gap), warm starts resume
+    if eng.stats["auto_m"] == len(eng.state.landmark_idx):
+        r = eng.select(
+            x + 0.005 * rng.normal(size=x.shape).astype(np.float32))
+        assert r.source == "warm"

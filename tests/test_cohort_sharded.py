@@ -112,6 +112,39 @@ def test_sharded_warm_start_equals_cold_start():
     np.testing.assert_allclose(r_warm.evals, r_cold.evals, atol=1e-2)
 
 
+def test_cohort_server_dqn_policy_roundtrip_sharded():
+    """DQN-policy serving through the sharded engine path: select ->
+    observe_round -> drifted update, with consistent cohorts and
+    advancing policy/engine stats (runs on the 8-way mesh in CI)."""
+    from repro.launch.serve import CohortServer
+
+    x, _ = blobs()
+    n, d = x.shape
+    srv = CohortServer(
+        n, d, seed=0, policy="dqn",
+        config=CohortConfig(num_clusters=4, method="sharded",
+                            num_landmarks=64),
+        dqn_overrides={"hidden": (32,), "eps_decay_steps": 10})
+    srv.update_embeddings(np.arange(n), x)
+    rng = np.random.default_rng(0)
+    for r in range(3):
+        ids, res = srv.select_cohort(16)
+        assert res.method == "sharded"
+        assert len(ids) == 16 and len(set(ids.tolist())) == 16
+        srv.observe_round(0.5 + 0.1 * r)
+        srv.update_embeddings(
+            ids, srv.embeds[ids]
+            + 0.01 * rng.normal(size=(16, d)).astype(np.float32))
+    st = srv.stats()
+    assert st["requests"] == 3 and st["rounds_observed"] == 3
+    assert st["engine"]["solves"] == 3
+    # drifted updates stay under the warm-start threshold
+    assert st["engine"]["warm_starts"] >= 1
+    assert st["policy"]["kind"] == "dqn"
+    assert st["policy"]["train_calls"] == 3
+    assert st["last_select"]["method"] == "sharded"
+
+
 _SUBPROCESS_CHECK = """
 import jax, jax.numpy as jnp, numpy as np
 assert len(jax.devices()) == 8, jax.devices()

@@ -1,0 +1,29 @@
+"""Docs stay runnable: every ```python snippet in README/docs executes.
+
+The CI docs job runs ``scripts/check_docs.py`` standalone; this test
+keeps the same guarantee inside the tier-1 suite so a snippet-breaking
+change fails locally too.
+"""
+
+import importlib.util
+import pathlib
+
+import pytest
+
+REPO = pathlib.Path(__file__).resolve().parent.parent
+spec = importlib.util.spec_from_file_location(
+    "check_docs", REPO / "scripts" / "check_docs.py")
+check_docs = importlib.util.module_from_spec(spec)
+spec.loader.exec_module(check_docs)
+
+
+def test_doc_files_discovered():
+    names = {p.name for p in check_docs.doc_files()}
+    assert {"README.md", "ARCHITECTURE.md", "BENCHMARKS.md"} <= names
+
+
+@pytest.mark.parametrize("path", check_docs.doc_files(),
+                         ids=lambda p: p.name)
+def test_doc_snippets_run(path, tmp_path, monkeypatch):
+    monkeypatch.chdir(REPO)          # snippets resolve repo-root paths
+    assert check_docs.run_file(path) >= 0

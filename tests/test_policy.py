@@ -1,0 +1,200 @@
+"""Policy serving: ClusterPolicy learning + the hardened CohortServer."""
+
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.cohort import CohortConfig
+from repro.launch.serve import CohortServer
+from repro.policy import ClusterPolicy
+
+FAST_DQN = {"hidden": (32,), "eps_decay_steps": 30, "buffer_size": 512,
+            "batch_size": 64}
+
+
+def blob_table(n=120, k=3, d=8, sep=8.0, seed=0):
+    rng = np.random.default_rng(seed)
+    centers = rng.normal(size=(k, d)).astype(np.float32) * sep
+    true = rng.integers(0, k, n)
+    x = (centers[true] + rng.normal(size=(n, d)).astype(np.float32))
+    return x, true
+
+
+def mk_server(n=120, k=3, d=8, policy="dqn", seed=0, **cfg_kw):
+    x, true = blob_table(n, k, d, seed=seed)
+    srv = CohortServer(n, d, seed=seed, policy=policy,
+                       config=CohortConfig(num_clusters=k, **cfg_kw),
+                       dqn_overrides=FAST_DQN if policy == "dqn" else None)
+    srv.update_embeddings(np.arange(n), x)
+    return srv, true
+
+
+# -- ClusterPolicy (Algorithm II in isolation) ---------------------------
+
+def test_cluster_policy_learns_to_avoid_zero_reward_cluster():
+    """Acceptance: trained on synthetic rewards where cluster 0 pays
+    nothing, the policy's draw weights shift away from cluster 0."""
+    k = 3
+    pol = ClusterPolicy(k, state_dim=4, seed=0, dqn_overrides=FAST_DQN)
+    rng = np.random.default_rng(0)
+    s = np.ones(4, np.float32)
+    for _ in range(120):
+        for a in range(k):
+            pol.observe(s, [a], 0.0 if a == 0 else 1.0, s)
+        pol.train(rng)
+    pol.agent.steps = 10_000            # decay ε to eps_end
+    w = pol.draw_weights(s)
+    assert w.shape == (k,) and abs(w.sum() - 1.0) < 1e-9
+    assert w[0] < 1.0 / k               # shifted away from zero reward
+    assert int(np.argmax(w)) != 0
+
+
+def test_cluster_policy_draw_contract():
+    """draw() honors pools: unique clients, no empty-cluster picks,
+    actions aligned with picked slots."""
+    k = 4
+    pol = ClusterPolicy(k, state_dim=3, seed=0, dqn_overrides=FAST_DQN)
+    rng = np.random.default_rng(0)
+    pools = {0: list(range(0, 5)), 1: list(range(5, 10)),
+             2: [], 3: list(range(10, 12))}
+    picked, actions = pol.draw(rng, np.zeros(3, np.float32), pools, 8)
+    assert len(picked) == 8 == len(actions)
+    assert len(set(picked)) == 8
+    assert 2 not in actions             # empty cluster never credited
+    # pool exhaustion: asking for more than exists returns what's there
+    pools = {c: ([0, 1] if c == 0 else []) for c in range(k)}
+    picked, actions = pol.draw(rng, np.zeros(3, np.float32), pools, 8)
+    assert sorted(picked) == [0, 1]
+
+
+# -- CohortServer: DQN-policy serving ------------------------------------
+
+def test_cohort_server_dqn_shifts_draws_from_stale_cluster():
+    """Acceptance criterion: serving with --policy dqn, a synthetic
+    reward that pays nothing for 'stale' clients (true cluster 0) pushes
+    the learned draw weights away from the engine cluster covering them."""
+    srv, true = mk_server()
+    k = srv.config.num_clusters
+    for _ in range(60):
+        ids, res = srv.select_cohort(12)
+        useful = float(np.mean(true[ids] != 0)) if len(ids) else 0.0
+        srv.observe_round(0.5 + 0.4 * useful)
+    # engine cluster holding the majority of true-cluster-0 clients
+    assign = srv.engine.state.result.assign
+    stale = int(np.argmax(np.bincount(assign[true == 0], minlength=k)))
+    srv.policy.agent.steps = 10_000     # read weights at ε = eps_end
+    w = srv.policy.draw_weights(srv._policy_state(assign))
+    assert w[stale] < 1.0 / k
+    assert int(np.argmax(w)) != stale
+
+
+def test_cohort_server_dqn_roundtrip_counters():
+    """stats() reports advancing engine/policy/latency counters."""
+    srv, true = mk_server()
+    for r in range(3):
+        ids, res = srv.select_cohort(10)
+        assert len(ids) == 10 and len(set(ids.tolist())) == 10
+        srv.observe_round(0.6, timings={"select": 0.01, "train": 0.2})
+    st = srv.stats()
+    assert st["requests"] == 3
+    assert st["rounds_observed"] == 3
+    assert st["engine"]["solves"] >= 1
+    assert st["engine"]["cache_hits"] == 2       # same table, cached
+    assert st["latency_s"]["total_s"] > 0
+    assert st["round_timings_s"]["train"] == pytest.approx(0.2)
+    assert st["last_select"]["method"] == "dense"
+    assert 0.0 <= st["policy"]["epsilon"] <= 1.0
+    assert st["policy"]["buffer_size"] > 0
+    assert st["policy"]["train_calls"] == 3
+    assert st["dropped_transitions"] == 0
+    # a second select before the round report replaces the parked
+    # transition — observable, not silent
+    srv.select_cohort(10)
+    srv.select_cohort(10)
+    assert srv.stats()["dropped_transitions"] == 1
+
+
+def test_cohort_server_stratified_unchanged_contract():
+    """The default policy still serves de-biased round-robin cohorts."""
+    srv, _ = mk_server(policy="stratified")
+    ids, res = srv.select_cohort(9)
+    assert len(ids) == 9 and len(set(ids.tolist())) == 9
+    # round-robin over k=3 clusters -> 3 from each
+    counts = np.bincount(res.assign[ids], minlength=res.k)
+    assert counts.max() - counts.min() <= 1
+    st = srv.stats()
+    assert st["policy"] == {"kind": "stratified"}
+
+
+def test_cohort_server_rejects_unknown_policy():
+    with pytest.raises(ValueError, match="unknown policy"):
+        CohortServer(10, 4, policy="bandit")
+
+
+# -- CohortServer: versioned copy-on-write table -------------------------
+
+def test_cohort_server_snapshot_versioning_and_immutability():
+    srv, _ = mk_server(policy="stratified")
+    v0, table0 = srv.snapshot()
+    with pytest.raises(ValueError):
+        table0[0, 0] = 1.0              # snapshots are frozen
+    srv.update_embeddings([0], np.ones((1, 8), np.float32))
+    v1, table1 = srv.snapshot()
+    assert v1 == v0 + 1
+    assert table1 is not table0         # copy-on-write, not in-place
+    assert table0[0, 0] != 1.0          # old snapshot untouched
+    assert table1[0, 0] == 1.0
+
+
+def test_cohort_server_concurrent_update_select_no_torn_reads():
+    """Interleaved update_embeddings/select_cohort: the table a solve
+    clusters must be one consistent version, never a half-written mix."""
+    n, d = 96, 4
+    base, _ = blob_table(n=n, k=3, d=d, seed=1)
+    srv = CohortServer(n, d, seed=0, policy="stratified",
+                       config=CohortConfig(num_clusters=3))
+    srv.update_embeddings(np.arange(n), base)
+
+    torn = []
+    orig_select = srv.engine.select
+
+    def spy(embeds, **kw):
+        before = np.array(embeds, copy=True)
+        time.sleep(0.01)                 # widen the race window
+        if not np.array_equal(before, np.asarray(embeds)):
+            torn.append("snapshot mutated under reader")
+        # version consistency: the table must be bit-identical to ONE
+        # writer version base + 0.001*v (same float32 op as the writer),
+        # never a mix of rows from different versions
+        offsets = np.asarray(embeds) - base
+        v_est = int(round(float(offsets.mean()) / 0.001))
+        if not np.array_equal(np.asarray(embeds),
+                              base + np.float32(0.001 * v_est)):
+            torn.append("mixed-version table")
+        return orig_select(before, **kw)
+
+    srv.engine.select = spy
+    stop = threading.Event()
+
+    def writer():
+        v = 0
+        while not stop.is_set():
+            v += 1
+            srv.update_embeddings(np.arange(n),
+                                  base + np.float32(0.001 * v))
+
+    th = threading.Thread(target=writer)
+    th.start()
+    try:
+        for _ in range(5):
+            ids, res = srv.select_cohort(6)
+            assert len(ids) == 6
+            assert res.assign.shape == (n,)
+    finally:
+        stop.set()
+        th.join()
+    assert not torn, torn
+    assert srv.version > 0
+    assert srv.stats()["updates"] == srv.version
