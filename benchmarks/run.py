@@ -11,6 +11,7 @@ Suites:
   table3    — paper Table 3: evaluation criteria of DQRE-SCnet
   fig6      — paper Fig. 6: accuracy-vs-round curves
   kernels   — Pallas/jnp kernel micro-benchmarks
+  serve     — concurrent cohort serving: serialized vs coalesced selects
   roofline  — §Roofline baseline table from the dry-run artifacts
 """
 
@@ -21,7 +22,7 @@ import sys
 import time
 
 
-SUITES = ["table2", "table3", "fig6", "kernels", "roofline"]
+SUITES = ["table2", "table3", "fig6", "kernels", "serve", "roofline"]
 
 
 def main() -> None:
@@ -46,6 +47,9 @@ def main() -> None:
         elif suite == "kernels":
             from benchmarks import kernel_bench
             kernel_bench.run(csv_rows)
+        elif suite == "serve":
+            from benchmarks import serve_bench
+            serve_bench.run(csv_rows)
         elif suite == "roofline":
             from benchmarks import roofline_table
             roofline_table.run(csv_rows)

@@ -1,0 +1,181 @@
+"""Concurrent cohort-serving benchmark: serialized vs coalesced selects.
+
+Measures end-to-end ``select_cohort`` throughput (selects/sec) on one
+embedding-table version at 1/4/16 concurrent clients per tenant × 1/4
+tenants (each tenant serves its own model family's client population,
+so concurrency scales per shard), two ways:
+
+* **serialized** — the PR 3 path: every thread calls
+  ``CohortServer.select_cohort`` directly, so requests queue one at a
+  time behind the engine lock and each pays its own fingerprint hash,
+  cached-result copy, pool build, and draw.
+* **batched** — the ``CohortFrontend`` coalescing path: concurrent
+  same-version requests ride one ``select_cohorts`` batch, amortizing
+  all of the above over the whole batch.
+
+Emits ``BENCH_serve.json`` (machine-readable sweep) next to the CSV
+rows.  The coalescing invariant is checked as it runs: after each
+measured phase every tenant's engine must still report exactly one
+solve for the (single) table version — everything else was a cache
+replay or a coalesced batch member.
+
+  PYTHONPATH=src python benchmarks/serve_bench.py            # full sweep
+  PYTHONPATH=src python benchmarks/serve_bench.py --small    # CI-sized
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import threading
+import time
+
+import numpy as np
+
+CONCURRENCY = (1, 4, 16)
+TENANTS = (1, 4)
+
+
+def _make_table(n: int, d: int, k: int, seed: int) -> np.ndarray:
+    rng = np.random.default_rng(seed)
+    centers = rng.normal(size=(k, d)) * 6
+    labels = rng.integers(0, k, n)
+    return (centers[labels]
+            + rng.normal(size=(n, d))).astype(np.float32)
+
+
+def _drive(select_one, tenant_names, concurrency: int, iters: int) -> float:
+    """Fire ``concurrency`` workers PER TENANT, each issuing ``iters``
+    selects against its tenant; returns total selects/sec."""
+    total = concurrency * len(tenant_names)
+    barrier = threading.Barrier(total + 1)
+
+    def worker(w):
+        name = tenant_names[w % len(tenant_names)]
+        barrier.wait()
+        for _ in range(iters):
+            select_one(name)
+
+    threads = [threading.Thread(target=worker, args=(w,))
+               for w in range(total)]
+    for t in threads:
+        t.start()
+    barrier.wait()
+    t0 = time.perf_counter()
+    for t in threads:
+        t.join()
+    dt = time.perf_counter() - t0
+    return total * iters / max(dt, 1e-9)
+
+
+def bench_point(num_tenants: int, concurrency: int, *, num_clients: int,
+                cohort_size: int, iters: int, seed: int = 0) -> dict:
+    from repro.cohort import CohortConfig
+    from repro.launch.frontend import make_demo_frontend
+    from repro.launch.serve import CohortServer
+
+    k, d = 8, 8
+    cfg = CohortConfig(num_clusters=k)
+    tables = {i: _make_table(num_clients, d, k, seed + i)
+              for i in range(num_tenants)}
+
+    # -- serialized: bare CohortServers, one per tenant ------------------
+    servers = {f"family-{i}": CohortServer(num_clients, d, seed=seed + i,
+                                           config=CohortConfig(num_clusters=k))
+               for i in range(num_tenants)}
+    for i, (name, srv) in enumerate(servers.items()):
+        srv.update_embeddings(np.arange(num_clients), tables[i])
+        srv.select_cohort(cohort_size)            # cold solve out of band
+    names = list(servers)
+    ser_sps = _drive(lambda nm: servers[nm].select_cohort(cohort_size),
+                     names, concurrency, iters)
+    for srv in servers.values():
+        assert srv.engine.stats["solves"] == 1, srv.engine.stats
+
+    # -- batched: the coalescing frontend --------------------------------
+    fe = make_demo_frontend(num_tenants, num_clients, d, config=cfg,
+                            seed=seed)
+    for i, name in enumerate(fe.tenant_names):
+        fe.update_embeddings(name, np.arange(num_clients), tables[i])
+        fe.select_cohort(name, cohort_size)       # cold solve out of band
+    bat_sps = _drive(lambda nm: fe.select_cohort(nm, cohort_size),
+                     fe.tenant_names, concurrency, iters)
+    for name in fe.tenant_names:
+        assert fe.tenant(name).engine.stats["solves"] == 1, \
+            fe.tenant(name).engine.stats
+    agg = fe.stats()["frontend"]
+
+    return {"tenants": num_tenants, "concurrency": concurrency,
+            "workers_total": concurrency * num_tenants,
+            "num_clients": num_clients, "cohort_size": cohort_size,
+            "iters_per_worker": iters,
+            "serialized_sps": ser_sps, "batched_sps": bat_sps,
+            "speedup": bat_sps / ser_sps,
+            "batch_factor": agg["batch_factor"],
+            "one_solve_per_tenant_version": True}
+
+
+def run(csv_rows: list, *, num_clients: int = 20_000, cohort_size: int = 64,
+        iters: int = 20, out: str = "BENCH_serve.json") -> list:
+    records = []
+    for num_tenants in TENANTS:
+        for concurrency in CONCURRENCY:
+            rec = bench_point(num_tenants, concurrency,
+                              num_clients=num_clients,
+                              cohort_size=cohort_size, iters=iters)
+            records.append(rec)
+            csv_rows.append(
+                (f"serve/t{num_tenants}/c{concurrency}/serialized",
+                 1e6 / rec["serialized_sps"],
+                 f"selects_per_sec={rec['serialized_sps']:.1f}"))
+            csv_rows.append(
+                (f"serve/t{num_tenants}/c{concurrency}/batched",
+                 1e6 / rec["batched_sps"],
+                 f"selects_per_sec={rec['batched_sps']:.1f} "
+                 f"speedup={rec['speedup']:.2f}x"))
+            print(f"tenants={num_tenants} concurrency={concurrency}: "
+                  f"serialized {rec['serialized_sps']:,.1f} selects/s, "
+                  f"batched {rec['batched_sps']:,.1f} selects/s "
+                  f"({rec['speedup']:.2f}x, batch factor "
+                  f"{rec['batch_factor']:.2f})")
+    with open(out, "w") as fh:
+        json.dump({"unit": "selects_per_sec", "records": records}, fh,
+                  indent=2)
+    return records
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--clients", type=int, default=20_000)
+    ap.add_argument("--cohort-size", type=int, default=64)
+    ap.add_argument("--iters", type=int, default=20,
+                    help="selects per worker per measured point")
+    ap.add_argument("--small", action="store_true",
+                    help="CI-sized run: 2000 clients, 8 iters")
+    ap.add_argument("--check", action="store_true",
+                    help="fail unless batched >= 1.5x serialized at 16 "
+                         "concurrent clients (CI smoke; the full-size "
+                         "sweep targets >= 3x)")
+    ap.add_argument("--out", default="BENCH_serve.json")
+    args = ap.parse_args()
+    if args.small:
+        args.clients, args.iters = 2000, 8
+
+    rows: list = []
+    records = run(rows, num_clients=args.clients,
+                  cohort_size=args.cohort_size, iters=args.iters,
+                  out=args.out)
+    if args.check:
+        worst = min(r["speedup"] for r in records
+                    if r["concurrency"] == max(CONCURRENCY))
+        if worst < 1.5:
+            print(f"FAIL: batched speedup {worst:.2f}x < 1.5x at "
+                  f"{max(CONCURRENCY)} concurrent clients")
+            return 1
+        print(f"ok: batched >= {worst:.2f}x serialized at "
+              f"{max(CONCURRENCY)} concurrent clients")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -32,6 +32,7 @@ Public API: ``CohortEngine(config, seed=...)``, ``engine.select(embeds)
 
 from __future__ import annotations
 
+import collections
 import dataclasses
 import hashlib
 import time
@@ -49,6 +50,9 @@ from repro.core.spectral import row_normalize
 
 _METHODS = ("auto", "dense", "nystrom", "sharded")
 _SKETCH_EPS = 1e-12
+# autotuning only ever reads the last two gaps; keep a short tail for
+# debugging but never let a long-running server grow the list unboundedly
+_GAP_HIST_MAX = 32
 
 # landmark-count autotuning (num_landmarks="auto"): relative eigengap
 # g = (λ_{k+1} − λ_k) / (λ_{k+1} − λ_1) — the share of the approximate
@@ -182,9 +186,13 @@ class CohortEngine:
         self._mesh = mesh
         self.state = CohortState()
         self._auto_m: Optional[int] = None     # autotuned landmark count
-        self._gap_hist: list = []              # relative eigengaps, cold solves
+        # relative eigengaps of recent cold solves (bounded: a server
+        # calling select every round forever must not leak memory here)
+        self._gap_hist: "collections.deque" = collections.deque(
+            maxlen=_GAP_HIST_MAX)
         self.stats = {"solves": 0, "cache_hits": 0, "warm_starts": 0,
-                      "cold_starts": 0}
+                      "cold_starts": 0, "probes": 0,
+                      "batched_selects": 0, "coalesced_requests": 0}
 
     # -- state ----------------------------------------------------------
     def reset(self) -> None:
@@ -246,6 +254,10 @@ class CohortEngine:
         key makes the call a one-off probe: it bypasses the fingerprint
         cache AND leaves the engine's cache/warm-start state untouched,
         so the default stream's (seed, embeds) purity is preserved.
+        Probes are also invisible to the persistent serving counters
+        (``solves`` / ``cold_starts`` / ``warm_starts``) — a dashboard
+        reading :attr:`stats` sees only real serving traffic; probes
+        count under ``stats["probes"]``.
         """
         embeds = np.ascontiguousarray(np.asarray(embeds, np.float32))
         cfg = self.config
@@ -296,7 +308,7 @@ class CohortEngine:
             if persist:
                 st.landmark_idx = st.w_basis = st.mm_basis = None
                 st.gamma = None
-            self.stats["cold_starts"] += 1
+                self.stats["cold_starts"] += 1
         else:
             y, evals, source = self._solve_landmarks(
                 x, solve_k, method, drift, land_key, solve_key,
@@ -323,7 +335,29 @@ class CohortEngine:
             if source != "warm":
                 st.sketch = sketch          # new cold baseline
             st.result = result
-        self.stats["solves"] += 1
+            self.stats["solves"] += 1
+        else:
+            self.stats["probes"] += 1
+        return result
+
+    def select_batched(self, embeds, *, requests: int = 1) -> CohortResult:
+        """One solve serving ``requests`` coalesced select calls.
+
+        The batched serving path (``CohortServer.select_cohorts`` /
+        ``CohortFrontend``) funnels every concurrent request against one
+        embedding-table version through a single engine entry; this
+        wrapper is that entry.  The clustering work is identical to
+        :meth:`select` — same cache, same warm-start state, same
+        determinism contract — but the ``batched_selects`` /
+        ``coalesced_requests`` counters record the coalescing so
+        ``requests / batched_selects`` reads as the realized batch
+        factor on a dashboard.
+        """
+        if requests < 1:
+            raise ValueError(f"requests={requests} must be >= 1")
+        result = self.select(embeds)
+        self.stats["batched_selects"] += 1
+        self.stats["coalesced_requests"] += requests
         return result
 
     def _solve_dense(self, x, k: int):
@@ -377,7 +411,7 @@ class CohortEngine:
         if gap < _GAP_WEAK:
             m = min(cap, 2 * m)
         elif (len(self._gap_hist) >= 2
-              and min(self._gap_hist[-2:]) > _GAP_STRONG
+              and min(list(self._gap_hist)[-2:]) > _GAP_STRONG
               and np.isfinite(drift)
               and drift <= _AUTO_M_DRIFT_FACTOR
               * self.config.drift_threshold):
@@ -432,5 +466,5 @@ class CohortEngine:
             st.gamma = float(gamma)
             st.w_basis = np.asarray(w_basis)
             st.mm_basis = np.asarray(mm_basis)
-        self.stats["warm_starts" if warm else "cold_starts"] += 1
+            self.stats["warm_starts" if warm else "cold_starts"] += 1
         return y, evals, ("warm" if warm else "cold")

@@ -3,9 +3,11 @@ from repro.fed.partition import partition_non_iid, sigma_to_alpha
 from repro.fed.client import local_train
 from repro.fed.server import fedavg_aggregate, weight_delta_embedding
 from repro.fed.rounds import FederatedRunner, RoundResult, RunnerConfig
-from repro.fed.metrics import classification_metrics, cluster_policy_state
+from repro.fed.metrics import (classification_metrics, cluster_policy_state,
+                               serving_state_dim)
 
 __all__ = ["make_dataset", "DATASETS", "partition_non_iid", "sigma_to_alpha",
            "local_train", "fedavg_aggregate", "weight_delta_embedding",
            "FederatedRunner", "RoundResult", "RunnerConfig",
-           "classification_metrics", "cluster_policy_state"]
+           "classification_metrics", "cluster_policy_state",
+           "serving_state_dim"]

@@ -6,18 +6,100 @@ we read it as macro precision, the closest standard quantity).
 
 Also home to :func:`cluster_policy_state` — the per-cluster
 participation/accuracy statistics the serving path feeds the DQN policy
-(``repro.policy.ClusterPolicy``) as its state vector.
+(``repro.policy.ClusterPolicy``) as its state vector.  Two feature sets
+are supported (the ``features`` knob, mirrored by
+``CohortServer(state_features=...)``):
+
+* ``"basic"`` — the original ``3k + 1`` layout: population fraction ‖
+  participation fraction ‖ reward EMA ‖ previous accuracy.  Kept for
+  replay-buffer back-compat: checkpointed/replayed transitions recorded
+  against the narrow state keep their shape.
+* ``"rich"``  — ``5k + 1``: the basic features plus per-cluster
+  embedding **dispersion** (how spread out each cluster is around its
+  centroid, relative to the global spread) and **staleness** (how many
+  selects since each cluster last contributed a client to a served
+  cohort).  This is the serving analogue of the simulation state's
+  cluster centroids — the served DQN sees cohesion and recency, not
+  just participation bookkeeping.
 """
 
 from __future__ import annotations
 
+from typing import Optional
+
 import numpy as np
+
+#: recognised feature sets for :func:`cluster_policy_state`.
+STATE_FEATURES = ("basic", "rich")
+
+
+def serving_state_dim(k: int, features: str = "rich") -> int:
+    """State-vector length of :func:`cluster_policy_state`.
+
+    ``3k + 1`` for ``"basic"`` (population / participation / reward EMA
+    + previous accuracy), ``5k + 1`` for ``"rich"`` (+ dispersion and
+    staleness per cluster).
+    """
+    if features not in STATE_FEATURES:
+        raise ValueError(f"unknown state features {features!r}; "
+                         f"expected one of {STATE_FEATURES}")
+    return (5 * k + 1) if features == "rich" else (3 * k + 1)
+
+
+def _check_per_cluster(name: str, arr: np.ndarray, k: int) -> np.ndarray:
+    """Validate a per-cluster stat vector: must cover all k clusters.
+
+    A silently short array used to be truncated by ``[:k]`` into a
+    wrong-length state that only failed much later, inside the DQN's
+    first matmul.  Fail here instead, naming the offending argument.
+    Longer arrays are still sliced to ``[:k]`` (callers that track
+    stats for a historical k̂ > k keep working).
+    """
+    arr = np.asarray(arr, np.float64).reshape(-1)
+    if len(arr) < k:
+        raise ValueError(
+            f"cluster_policy_state: {name} has length {len(arr)} but "
+            f"k={k} clusters; per-cluster stats must cover every "
+            f"cluster (pad missing clusters with zeros upstream)")
+    return arr[:k]
+
+
+def cluster_dispersion(embeds: np.ndarray, assign: np.ndarray,
+                       k: int) -> np.ndarray:
+    """Per-cluster embedding spread, scale-free and bounded to [0, 1).
+
+    For each cluster: the mean squared distance of its members to the
+    cluster centroid, divided by the global mean squared distance to the
+    global centroid, squashed through ``x / (1 + x)``.  Empty clusters
+    report 0.  A tight cluster sits near 0; one as diffuse as the whole
+    table sits near 0.5; a cluster wider than the table tends to 1.
+    """
+    embeds = np.asarray(embeds, np.float64)
+    assign = np.asarray(assign)
+    global_var = float(
+        np.mean(np.sum((embeds - embeds.mean(axis=0)) ** 2, axis=1)))
+    out = np.zeros(k, np.float64)
+    if global_var <= 0.0:
+        return out
+    for c in range(k):
+        members = embeds[assign == c]
+        if len(members) == 0:
+            continue
+        var = float(np.mean(
+            np.sum((members - members.mean(axis=0)) ** 2, axis=1)))
+        ratio = var / global_var
+        out[c] = ratio / (1.0 + ratio)
+    return out
 
 
 def cluster_policy_state(assign: np.ndarray, k: int,
                          participation: np.ndarray,
                          reward_ema: np.ndarray,
-                         prev_accuracy: float) -> np.ndarray:
+                         prev_accuracy: float,
+                         *,
+                         embeds: Optional[np.ndarray] = None,
+                         staleness: Optional[np.ndarray] = None,
+                         features: str = "rich") -> np.ndarray:
     """Serving-side DQN state: per-cluster stats + last global accuracy.
 
     Args:
@@ -28,28 +110,78 @@ def cluster_policy_state(assign: np.ndarray, k: int,
         reward_ema:    (k,) exponential moving average of the round
                        reward credited to draws from each cluster.
         prev_accuracy: global-model accuracy after the last round.
+        embeds:        (n, d) embedding table behind ``assign``; required
+                       for ``features="rich"`` (dispersion).
+        staleness:     (k,) count of selects since each cluster last
+                       contributed a client to a served cohort; required
+                       for ``features="rich"``.
+        features:      ``"basic"`` (3k + 1) | ``"rich"`` (5k + 1).
 
     Returns:
-        (3k + 1,) float32 vector ``[population_frac ‖ participation_frac
-        ‖ reward_ema ‖ prev_accuracy]`` — population fraction is each
-        cluster's share of clients, participation fraction its share of
-        all slots served (uniform 1/k before any draw, so round 0 is not
-        a degenerate all-zeros state).
+        float32 vector ``[population_frac ‖ participation_frac ‖
+        reward_ema ( ‖ dispersion ‖ staleness_frac ) ‖ prev_accuracy]``
+        — population fraction is each cluster's share of clients,
+        participation fraction its share of all slots served (uniform
+        1/k before any draw, so round 0 is not a degenerate all-zeros
+        state), staleness squashed to [0, 1) via ``s / (1 + s)``.
     """
+    if features not in STATE_FEATURES:
+        raise ValueError(f"unknown state features {features!r}; "
+                         f"expected one of {STATE_FEATURES}")
     n = max(len(assign), 1)
     pop = np.bincount(np.asarray(assign), minlength=k)[:k] / n
-    participation = np.asarray(participation, np.float64)[:k]
+    participation = _check_per_cluster("participation", participation, k)
+    reward = _check_per_cluster("reward_ema", reward_ema, k)
     total = participation.sum()
     part = (participation / total) if total > 0 else np.full(k, 1.0 / k)
-    return np.concatenate(
-        [pop, part, np.asarray(reward_ema, np.float64)[:k],
-         [prev_accuracy]]).astype(np.float32)
+    parts = [pop, part, reward]
+    if features == "rich":
+        if embeds is None:
+            raise ValueError(
+                "cluster_policy_state: features='rich' needs the "
+                "embedding table (embeds=) for the dispersion features; "
+                "pass features='basic' for the participation-only state")
+        if staleness is None:
+            raise ValueError(
+                "cluster_policy_state: features='rich' needs the "
+                "per-cluster staleness counts (staleness=)")
+        stale = _check_per_cluster("staleness", staleness, k)
+        parts.append(cluster_dispersion(embeds, assign, k))
+        parts.append(stale / (1.0 + stale))
+    parts.append([prev_accuracy])
+    return np.concatenate(parts).astype(np.float32)
 
 
 def confusion(y_true: np.ndarray, y_pred: np.ndarray, k: int) -> np.ndarray:
     cm = np.zeros((k, k), np.int64)
     np.add.at(cm, (y_true, y_pred), 1)
     return cm
+
+
+def _midranks(scores: np.ndarray) -> np.ndarray:
+    """1-based midranks: tied scores share the mean of their positions.
+
+    The double-argsort trick assigns ties arbitrary *ordinal* ranks
+    (whichever came first in memory wins), which biases the
+    Mann–Whitney U statistic whenever logits tie — e.g. saturated
+    softmax outputs or integer-ish scores.  Midranks are the standard
+    tie correction: AUC under ties is then the probability of a correct
+    ranking with ties counted as 1/2.
+    """
+    order = np.argsort(scores, kind="stable")
+    sorted_scores = scores[order]
+    n = len(scores)
+    ranks = np.empty(n, np.float64)
+    i = 0
+    while i < n:
+        j = i
+        while j < n and sorted_scores[j] == sorted_scores[i]:
+            j += 1
+        ranks[i:j] = 0.5 * (i + j - 1) + 1.0     # mean of 1-based i+1..j
+        i = j
+    out = np.empty(n, np.float64)
+    out[order] = ranks
+    return out
 
 
 def classification_metrics(y_true: np.ndarray, logits: np.ndarray) -> dict:
@@ -71,15 +203,17 @@ def classification_metrics(y_true: np.ndarray, logits: np.ndarray) -> dict:
     pe = float((cm.sum(axis=0) * cm.sum(axis=1)).sum()) / max(total ** 2, 1)
     kappa = (acc - pe) / max(1 - pe, 1e-12)
 
-    # macro one-vs-rest AUC via the rank statistic
+    # macro one-vs-rest AUC via the Mann–Whitney rank statistic, with
+    # midranks so tied logits contribute 1/2 instead of an order-of-
+    # appearance bias
     aucs = []
     for c in range(k):
         pos = logits[y_true == c, c]
         neg = logits[y_true != c, c]
         if len(pos) == 0 or len(neg) == 0:
             continue
-        ranks = np.argsort(np.argsort(np.concatenate([pos, neg])))
-        auc = (ranks[: len(pos)].sum() - len(pos) * (len(pos) - 1) / 2) \
+        ranks = _midranks(np.concatenate([pos, neg]))
+        auc = (ranks[: len(pos)].sum() - len(pos) * (len(pos) + 1) / 2) \
             / (len(pos) * len(neg))
         aucs.append(auc)
     auc = float(np.mean(aucs)) if aucs else 0.5

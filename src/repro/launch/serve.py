@@ -25,6 +25,16 @@ per-phase latencies, table version, and the policy's ε / replay fill.
 
   PYTHONPATH=src python -m repro.launch.serve --cohort 100000 \
       --cohort-size 64 --landmarks kmeans++ --policy dqn --rounds 5
+
+Multi-tenant serving lives one layer up, in
+``repro.launch.frontend.CohortFrontend``: named per-model-family shards
+(each a ``CohortServer``) and a coalescing select path that batches
+concurrent same-version requests behind one engine solve
+(``CohortServer.select_cohorts``).  ``--tenants T`` switches the
+``--cohort`` demo to that frontend:
+
+  PYTHONPATH=src python -m repro.launch.serve --cohort 20000 \
+      --tenants 4 --concurrency 16 --cohort-size 64 --rounds 5
 """
 
 from __future__ import annotations
@@ -61,7 +71,7 @@ class Server:
         key = jax.random.PRNGKey(seed)
         self.params = T.init_lm(key, cfg)
         self._prefill = jax.jit(
-            lambda p, b, c: T.lm_prefill(p, cfg, b, c))
+            lambda p, b, c, last: T.lm_prefill(p, cfg, b, c, last_pos=last))
         self._decode = jax.jit(
             lambda p, t, c, pos: T.lm_decode_step(p, cfg, t, c, pos))
         self._rng = np.random.default_rng(seed)
@@ -77,20 +87,38 @@ class Server:
                         np.int32)
 
     def serve_batch(self, requests: List[Request]) -> List[Request]:
+        """Prefill + decode one admitted batch (static shapes).
+
+        Heterogeneous prompt lengths are right-padded to the batch
+        maximum; each request's FIRST token is sampled from the logits
+        at its own last prompt position (causal attention guarantees
+        those are pad-free).  Known limitation: decode is still
+        batch-static — a shorter prompt's later tokens are written at
+        the padded positions and its decode steps can attend to the pad
+        KV-cache entries, so continuations beyond the first token are
+        approximate under mixed lengths (see ROADMAP: per-request decode
+        positions + pad masking).
+        """
         import jax.numpy as jnp
         from repro.models import transformer as T
 
         assert len(requests) <= self.batch
+        if not requests:                  # nothing to pad the batch from
+            return []
         while len(requests) < self.batch:                  # pad the batch
             requests = requests + [Request(-1, requests[0].prompt, 0)]
         plen = max(len(r.prompt) for r in requests)
         toks = np.zeros((self.batch, plen), np.int32)
         for i, r in enumerate(requests):
             toks[i, : len(r.prompt)] = r.prompt
+        # per-request prompt-end positions: a shorter prompt's first
+        # token must be sampled from its own last-token logits, not the
+        # padded batch length (which conditions on the pad zeros)
+        last_pos = np.array([len(r.prompt) - 1 for r in requests], np.int32)
 
         caches = T.init_lm_cache(self.cfg, self.batch, self.max_seq)
         logits, caches = self._prefill(self.params, {"tokens": jnp.asarray(toks)},
-                                       caches)
+                                       caches, jnp.asarray(last_pos))
         out = [[] for _ in requests]
         tok = self._sample(np.asarray(logits))
         steps = max(r.max_new_tokens for r in requests)
@@ -155,6 +183,11 @@ class CohortServer:
         policy:       "stratified" | "dqn".
         target_accuracy: reward pivot for the DQN policy's shaping.
         dqn_overrides: DQNConfig field overrides for ``policy="dqn"``.
+        state_features: DQN serving-state layout — ``"rich"`` (default,
+            ``5k + 1``: + per-cluster embedding dispersion and
+            staleness) or ``"basic"`` (the legacy ``3k + 1``
+            participation-only state; keeps replay buffers recorded
+            against the narrow shape loadable).
     """
 
     POLICIES = ("stratified", "dqn")
@@ -162,8 +195,10 @@ class CohortServer:
     def __init__(self, num_clients: int, embed_dim: int, *,
                  config=None, seed: int = 0, policy: str = "stratified",
                  target_accuracy: float = 0.85,
-                 dqn_overrides: Optional[dict] = None):
+                 dqn_overrides: Optional[dict] = None,
+                 state_features: str = "rich"):
         from repro.cohort import CohortConfig, CohortEngine
+        from repro.fed.metrics import serving_state_dim
 
         if policy not in self.POLICIES:
             raise ValueError(f"unknown policy {policy!r}; "
@@ -173,14 +208,17 @@ class CohortServer:
         self.rng = np.random.default_rng(seed)
         self.policy_name = policy
         self.target_accuracy = target_accuracy
+        self.state_features = state_features
         k = self.config.num_clusters
+        state_dim = serving_state_dim(k, state_features)  # validates knob
         if policy == "dqn":
             from repro.policy import ClusterPolicy
-            # serving state = cluster_policy_state(): 3 stats per
-            # cluster (population / participation / reward EMA) + the
-            # last reported global accuracy
-            self.policy = ClusterPolicy(k, state_dim=3 * k + 1, seed=seed,
-                                        dqn_overrides=dqn_overrides)
+            # serving state = cluster_policy_state(): per-cluster
+            # population / participation / reward EMA (+ dispersion and
+            # staleness when "rich") + the last reported global accuracy
+            self.policy = ClusterPolicy(k, state_dim=state_dim, seed=seed,
+                                        dqn_overrides=dqn_overrides,
+                                        state_features=state_features)
         else:
             self.policy = None
 
@@ -192,12 +230,15 @@ class CohortServer:
 
         self._participation = np.zeros(k, np.float64)
         self._reward_ema = np.zeros(k, np.float32)
+        # selects since each cluster last contributed a served client
+        # (the "rich" state's staleness feature)
+        self._staleness = np.zeros(k, np.float64)
         self.prev_accuracy = 0.0
-        self._pending = None              # (state_vec, actions, assign)
+        self._pending = None              # (state_vec, actions, assign, table)
         self._latency = {"solve_s": 0.0, "draw_s": 0.0, "total_s": 0.0}
         self._round_timings: dict = {}    # running means per phase
-        self._counters = {"requests": 0, "updates": 0, "rounds_observed": 0,
-                          "dropped_transitions": 0}
+        self._counters = {"requests": 0, "batches": 0, "updates": 0,
+                          "rounds_observed": 0, "dropped_transitions": 0}
         self.last_select_s = 0.0
 
     # -- embedding table (versioned copy-on-write) -----------------------
@@ -240,11 +281,16 @@ class CohortServer:
         self._latency[name] = (value if self._counters["requests"] == 0
                                else prev + _LATENCY_EMA * (value - prev))
 
-    def _policy_state(self, assign: np.ndarray) -> np.ndarray:
+    def _policy_state(self, assign: np.ndarray,
+                      table: np.ndarray) -> np.ndarray:
         from repro.fed.metrics import cluster_policy_state
-        return cluster_policy_state(assign, self.config.num_clusters,
-                                    self._participation, self._reward_ema,
-                                    self.prev_accuracy)
+        rich = self.state_features == "rich"
+        return cluster_policy_state(
+            assign, self.config.num_clusters,
+            self._participation, self._reward_ema, self.prev_accuracy,
+            embeds=table if rich else None,
+            staleness=self._staleness if rich else None,
+            features=self.state_features)
 
     def select_cohort(self, cohort_size: int):
         """Serve one cohort; returns ``(client_ids, CohortResult)``.
@@ -254,45 +300,97 @@ class CohortServer:
         actions) pair is parked until :meth:`observe_round` reports the
         round's accuracy.
         """
+        return self.select_cohorts([cohort_size])[0]
+
+    def select_cohorts(self, cohort_sizes: Optional[List[int]] = None, *,
+                       sizes_fn=None):
+        """Serve a batch of cohort requests from ONE engine solve.
+
+        This is the coalesced entry point the
+        :class:`repro.launch.frontend.CohortFrontend` batches concurrent
+        ``select_cohort`` calls into: the embedding table is snapshotted
+        once, the engine runs once (``select_batched``), and every
+        request draws from the **same shared cluster pools** — pools are
+        popped without replacement across the whole batch, so no client
+        is served to two cohorts of the same batch.  Returns one
+        ``(client_ids, CohortResult)`` pair per requested size; the
+        ``CohortResult`` is the single solve shared by the batch.
+
+        ``sizes_fn`` (exclusive with ``cohort_sizes``) defers the batch
+        membership decision until the select lock is actually held: the
+        frontend passes a callback that seals its in-flight batch at
+        that moment, so requests arriving while an earlier solve holds
+        the lock still coalesce into this one — natural batching with
+        zero added latency for uncontended callers.
+
+        With ``policy="dqn"`` the batch parks ONE combined transition
+        (the shared pre-draw state with every slot's cluster action
+        across the batch); the next :meth:`observe_round` credits them
+        all — the batch is one logical round of the serve contract.
+        """
+        if (cohort_sizes is None) == (sizes_fn is None):
+            raise ValueError(
+                "select_cohorts takes exactly one of cohort_sizes or "
+                "sizes_fn")
+        if cohort_sizes is not None and not len(cohort_sizes):
+            return []
         with self._select_lock:
+            sizes = [int(s) for s in (cohort_sizes if sizes_fn is None
+                                      else sizes_fn())]
+            if not sizes:
+                return []
             t0 = time.perf_counter()
             _, table = self.snapshot()
-            res = self.engine.select(table)
+            res = self.engine.select_batched(table, requests=len(sizes))
             t_solve = time.perf_counter()
             k = self.config.num_clusters
             pools = {c: list(np.flatnonzero(res.assign == c))
                      for c in range(k)}
+            cohorts: List[np.ndarray] = []
             if self.policy is not None:
-                state = self._policy_state(res.assign)
-                picked, actions = self.policy.draw(
-                    self.rng, state, pools, cohort_size)
+                state = self._policy_state(res.assign, table)
+                all_actions: List[int] = []
+                for size in sizes:
+                    picked, actions = self.policy.draw(
+                        self.rng, state, pools, size)
+                    cohorts.append(np.asarray(picked[:size], np.int64))
+                    all_actions.extend(actions[: len(picked)])
                 if self._pending is not None:
                     # the serve contract is select -> observe_round ->
-                    # select; a second select before the round report
-                    # replaces the parked transition, and the earlier
-                    # draw is never learned from — count it so the
-                    # dashboard can see mis-sequenced callers
+                    # select; a second select (or batch) before the
+                    # round report replaces the parked transition, and
+                    # the earlier draw is never learned from — count it
+                    # so the dashboard can see mis-sequenced callers
                     self._counters["dropped_transitions"] += 1
-                self._pending = (state, actions, res.assign)
+                self._pending = (state, all_actions, res.assign, table)
             else:
                 for pool in pools.values():
                     self.rng.shuffle(pool)
-                ordered = [pools[c] for c in range(res.k)]
-                picked = []
-                while len(picked) < cohort_size and any(ordered):
-                    for pool in ordered:
-                        if pool and len(picked) < cohort_size:
-                            picked.append(pool.pop())
-            picked = np.asarray(picked[:cohort_size], np.int64)
-            if len(picked):
-                np.add.at(self._participation, res.assign[picked], 1.0)
+                for size in sizes:
+                    ordered = [pools[c] for c in range(res.k)]
+                    picked: List[int] = []
+                    while len(picked) < size and any(ordered):
+                        for pool in ordered:
+                            if pool and len(picked) < size:
+                                picked.append(pool.pop())
+                    cohorts.append(np.asarray(picked[:size], np.int64))
+            flat = (np.concatenate(cohorts) if cohorts
+                    else np.empty(0, np.int64))
+            if len(flat):
+                np.add.at(self._participation, res.assign[flat], 1.0)
+            # staleness: every cluster ages one select; those that just
+            # contributed a client reset to fresh
+            self._staleness += 1.0
+            if len(flat):
+                self._staleness[np.unique(res.assign[flat])] = 0.0
             t1 = time.perf_counter()
             self._ema("solve_s", t_solve - t0)
             self._ema("draw_s", t1 - t_solve)
             self._ema("total_s", t1 - t0)
-            self._counters["requests"] += 1
+            self._counters["requests"] += len(sizes)
+            self._counters["batches"] += 1
             self.last_select_s = t1 - t0
-            return picked, res
+            return [(picked, res) for picked in cohorts]
 
     def observe_round(self, accuracy: float, timings: Optional[dict] = None,
                       ) -> float:
@@ -315,12 +413,12 @@ class CohortServer:
         # and its clear, or that round's learning step would be dropped
         with self._select_lock:
             if self.policy is not None and self._pending is not None:
-                state, actions, assign = self._pending
+                state, actions, assign, table = self._pending
                 for c in set(actions):
                     self._reward_ema[c] += _REWARD_EMA * (
                         reward - self._reward_ema[c])
                 self.prev_accuracy = accuracy
-                next_state = self._policy_state(assign)
+                next_state = self._policy_state(assign, table)
                 self.policy.observe(state, actions, reward, next_state)
                 self.policy.train(self.rng)
                 self._pending = None
@@ -338,16 +436,19 @@ class CohortServer:
     def stats(self) -> dict:
         """One dict for the serving dashboard: engine, latency, policy.
 
-        Keys: ``requests`` / ``updates`` / ``rounds_observed`` /
-        ``dropped_transitions`` counters (the last counts DQN draws
-        replaced by a second ``select_cohort`` before their round was
-        reported — mis-sequenced callers),
-        ``table_version``, ``num_clients``, ``engine`` (cache hits,
-        warm/cold starts, solves, autotuned ``auto_m`` when enabled),
+        Keys: ``requests`` / ``batches`` (engine entries — ``requests /
+        batches`` is the realized coalescing factor) / ``updates`` /
+        ``rounds_observed`` / ``dropped_transitions`` counters (the last
+        counts DQN draws replaced by a second ``select_cohort`` before
+        their round was reported — mis-sequenced callers),
+        ``table_version``, ``num_clients``, ``state_features``,
+        ``engine`` (cache hits, warm/cold starts, solves, probes,
+        batched-select counters, autotuned ``auto_m`` when enabled),
         ``latency_s`` (EMA solve/draw/total), ``round_timings_s``
         (running means of ingested ``RoundResult.timings`` phases),
         ``last_select`` (method/source/drift/k of the latest solve), and
-        ``policy`` (kind plus ε / steps / replay fill for "dqn").
+        ``policy`` (kind plus ε / state dim / steps / replay fill for
+        "dqn").
         """
         last = self.engine.state.result
         policy = {"kind": self.policy_name}
@@ -357,6 +458,7 @@ class CohortServer:
             **dict(self._counters),
             "table_version": self.version,
             "num_clients": self.embeds.shape[0],
+            "state_features": self.state_features,
             "engine": dict(self.engine.stats),
             "latency_s": dict(self._latency),
             "round_timings_s": dict(self._round_timings),
@@ -438,10 +540,23 @@ def main() -> None:
                     help="cohort draw: uniform stratified, or the "
                          "paper's cluster-level DQN (Algorithm II)")
     ap.add_argument("--rounds", type=int, default=5)
+    ap.add_argument("--tenants", type=int, default=0, metavar="T",
+                    help="with --cohort: serve T model-family tenants "
+                         "through the coalescing CohortFrontend instead "
+                         "of one CohortServer")
+    ap.add_argument("--concurrency", type=int, default=16,
+                    help="concurrent select workers in --tenants mode")
+    ap.add_argument("--batch-window", type=float, default=0.0,
+                    help="extra coalescing wait (s) in --tenants mode; "
+                         "0 = natural batching only")
     args = ap.parse_args()
 
     if args.cohort:
-        _cohort_main(args)
+        if args.tenants:
+            from repro.launch.frontend import run_demo
+            run_demo(args)
+        else:
+            _cohort_main(args)
         return
 
     from repro.configs import get_config

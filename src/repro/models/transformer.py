@@ -342,14 +342,27 @@ def lm_train_loss(params, cfg, batch, *, remat=True):
     return loss, metrics
 
 
-def lm_prefill(params, cfg, batch, caches, *, window=None):
-    """Prefill: fill KV caches for the prompt, return last-position logits."""
+def lm_prefill(params, cfg, batch, caches, *, window=None, last_pos=None):
+    """Prefill: fill KV caches for the prompt, return last-position logits.
+
+    ``last_pos`` — optional (B,) int32 of each sequence's final *prompt*
+    position; logits are read there instead of at the padded batch end.
+    With right-padded heterogeneous prompts and causal attention the
+    logits at ``last_pos[i]`` are exactly the unpadded sequence's next-
+    token distribution (later pad positions cannot leak backwards);
+    sampling at the shared padded end would condition shorter prompts on
+    their own padding.
+    """
     tokens = batch.get("tokens")
     h = embed_inputs(params, cfg, tokens, batch.get("prefix_embeds"))
     positions = jnp.arange(h.shape[1])
     h, caches, _ = lm_hidden(params, cfg, h, positions=positions,
                              window=window, caches=caches, cache_pos=0)
-    logits = lm_logits(params, cfg, h[:, -1:])
+    if last_pos is None:
+        sel = h[:, -1:]
+    else:
+        sel = h[jnp.arange(h.shape[0]), jnp.asarray(last_pos)][:, None]
+    logits = lm_logits(params, cfg, sel)
     return logits[:, 0], caches
 
 

@@ -49,16 +49,43 @@ class ClusterPolicy:
         seed:         PRNG seed for the Q-network init and the fallback rng.
         dqn_overrides: optional :class:`~repro.core.dqn.DQNConfig` field
             overrides (e.g. ``{"eps_decay_steps": 50, "hidden": (32,)}``).
+        state_features: optional label of the state layout this policy
+            was built for (e.g. ``"rich"`` for the server's ``5k + 1``
+            :func:`repro.fed.metrics.cluster_policy_state`).  Purely
+            descriptive — reported by :meth:`stats` and echoed in the
+            shape-mismatch error — the policy stays state-agnostic.
     """
 
     def __init__(self, num_clusters: int, state_dim: int, *, seed: int = 0,
-                 dqn_overrides: Optional[dict] = None):
+                 dqn_overrides: Optional[dict] = None,
+                 state_features: Optional[str] = None):
         self.num_clusters = num_clusters
+        self.state_dim = state_dim
+        self.state_features = state_features
         cfg = DQNConfig(state_dim=state_dim, num_actions=num_clusters,
                         **(dqn_overrides or {}))
         self.agent = DQNAgent(jax.random.PRNGKey(seed), cfg)
         self.rng = np.random.default_rng(seed)
         self.last_loss = 0.0
+
+    def _check_state(self, state_vec: np.ndarray, caller: str) -> np.ndarray:
+        """Fail fast on a wrong-length state with a readable error.
+
+        Without this, a mis-built state (e.g. per-cluster stats shorter
+        than k, or a "rich" state fed to a policy built for "basic")
+        only dies inside the Q-network's first matmul with an opaque
+        shape message.
+        """
+        s = np.asarray(state_vec, np.float32).reshape(-1)
+        if len(s) != self.state_dim:
+            layout = (f" (policy built for state_features="
+                      f"{self.state_features!r})" if self.state_features
+                      else "")
+            raise ValueError(
+                f"ClusterPolicy.{caller}: state vector has length "
+                f"{len(s)} but the policy expects state_dim="
+                f"{self.state_dim}{layout}")
+        return s
 
     # -- acting -----------------------------------------------------------
     def epsilon(self) -> float:
@@ -73,7 +100,7 @@ class ClusterPolicy:
         ``ε/k`` everywhere plus ``1-ε`` on the greedy (argmax-Q) cluster.
         Pure readout — does not advance the ε schedule.
         """
-        q = self.agent.q_values(np.asarray(state_vec, np.float32))
+        q = self.agent.q_values(self._check_state(state_vec, "draw_weights"))
         k = self.num_clusters
         eps = self.agent.epsilon()
         w = np.full(k, eps / k, np.float64)
@@ -101,7 +128,7 @@ class ClusterPolicy:
             Advances the agent's ε schedule by one step.
         """
         self.agent.steps += 1
-        q = self.agent.q_values(np.asarray(state_vec, np.float32))
+        q = self.agent.q_values(self._check_state(state_vec, "draw"))
         eps = self.agent.epsilon()
         for pool in pools.values():
             rng.shuffle(pool)
@@ -128,8 +155,8 @@ class ClusterPolicy:
                 reward: float, next_state_vec: np.ndarray) -> None:
         """Record one round: every slot's cluster choice shares the
         round's scalar reward (the paper credits all "rewarded users")."""
-        s = np.asarray(state_vec, np.float32)
-        s2 = np.asarray(next_state_vec, np.float32)
+        s = self._check_state(state_vec, "observe")
+        s2 = self._check_state(next_state_vec, "observe")
         for a in actions:
             self.agent.observe(s, int(a), reward, s2)
 
@@ -143,6 +170,8 @@ class ClusterPolicy:
         """Serving-dashboard counters: ε, steps, replay fill, last loss."""
         buf = self.agent.buffer
         return {"epsilon": self.agent.epsilon(),
+                "state_dim": self.state_dim,
+                "state_features": self.state_features,
                 "steps": self.agent.steps,
                 "train_calls": self.agent.train_calls,
                 "buffer_fill": buf.size / buf.capacity,

@@ -2,6 +2,7 @@
 
 import jax
 import numpy as np
+import pytest
 
 from repro.core import DQNAgent, DQNConfig, qnet_apply, qnet_init
 
@@ -36,6 +37,7 @@ def test_target_network_syncs_periodically():
     np.testing.assert_allclose(after, np.asarray(agent.params[0]["w"]))
 
 
+@pytest.mark.slow
 def test_learns_bandit_preference():
     """Action 1 always pays 1, action 0 pays 0 — Q(s,1) must end higher."""
     agent = mk_agent()

@@ -1,6 +1,7 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
 from repro.configs import get_config
 from repro.models import encdec as E
@@ -67,6 +68,7 @@ def test_decode_step_matches_teacher_forcing():
                                np.asarray(full_logits[:, -1]), atol=2e-3)
 
 
+@pytest.mark.slow
 def test_train_loss_finite_and_decreases():
     params = E.init_encdec(KEY, CFG)
     batch = _batch()

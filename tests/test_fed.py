@@ -41,6 +41,52 @@ def test_higher_sigma_more_skew():
     assert skew(0.0) > skew(0.8) > skew(1.0) - 1e-9
 
 
+def test_macro_auc_uses_midranks_under_ties():
+    """Tied logits must contribute 1/2 per tied (pos, neg) pair.  The
+    old double-argsort assigned ties ordinal ranks by memory order, so
+    the AUC depended on which class happened to come first."""
+    from repro.fed.metrics import classification_metrics
+
+    # binary, class-0 column: pos scores [1, 1], neg scores [1, 0]
+    # exact AUC = mean over pairs of 1[pos>neg] + 0.5*1[pos==neg]
+    #           = (0.5 + 1 + 0.5 + 1) / 4 = 0.75 for class 0
+    y = np.array([0, 0, 1, 1])
+    logits = np.array([[1.0, 0.0],
+                       [1.0, 0.0],
+                       [1.0, 1.0],      # ties class-0 score with the pos
+                       [0.0, 1.0]])
+    m = classification_metrics(y, logits)
+    # class 1 column: pos [1, 1] vs neg [0, 0] -> AUC 1; macro = 0.875
+    assert m["auc"] == pytest.approx((0.75 + 1.0) / 2)
+
+    # order invariance: relabeling row order must not change the AUC
+    perm = np.array([3, 1, 0, 2])
+    m2 = classification_metrics(y[perm], logits[perm])
+    assert m2["auc"] == pytest.approx(m["auc"])
+
+    # all-tied logits carry no ranking information: AUC is exactly 1/2
+    m3 = classification_metrics(y, np.ones((4, 2)))
+    assert m3["auc"] == pytest.approx(0.5)
+
+
+def test_macro_auc_matches_ordinal_ranks_without_ties():
+    """With distinct scores midranks equal ordinal ranks — the fix only
+    changes tied inputs."""
+    from repro.fed.metrics import classification_metrics
+
+    rng = np.random.default_rng(0)
+    y = rng.integers(0, 3, 60)
+    logits = rng.normal(size=(60, 3))          # ties have measure zero
+    m = classification_metrics(y, logits)
+    aucs = []
+    for c in range(3):
+        pos, neg = logits[y == c, c], logits[y != c, c]
+        ranks = np.argsort(np.argsort(np.concatenate([pos, neg])))
+        aucs.append((ranks[: len(pos)].sum() - len(pos) * (len(pos) - 1) / 2)
+                    / (len(pos) * len(neg)))
+    assert m["auc"] == pytest.approx(float(np.mean(aucs)))
+
+
 def test_fedavg_aggregate_weighted_mean():
     p1 = {"w": jnp.ones((2, 2))}
     stacked = {"w": jnp.stack([jnp.ones((2, 2)), 3 * jnp.ones((2, 2))])}

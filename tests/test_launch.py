@@ -99,3 +99,31 @@ def test_server_pads_partial_batches():
         [Request(7, rng.integers(0, cfg.vocab_size, 6).astype(np.int32), 3)])
     assert len(reqs) == 1 and reqs[0].uid == 7
     assert len(reqs[0].generated) == 3
+
+
+def test_server_empty_batch_returns_empty():
+    """An empty request list is a no-op, not an IndexError on the pad
+    path (requests[0] of nothing)."""
+    cfg = get_config("qwen2-7b").reduced()
+    server = Server(cfg, batch=2, max_seq=16, seed=0)
+    assert server.serve_batch([]) == []
+
+
+def test_server_heterogeneous_prompts_sample_at_own_length():
+    """A shorter prompt's first token comes from ITS last-token logits,
+    not the padded batch end (which conditions on the pad zeros): the
+    first generated token must match serving the same prompt alone,
+    where no padding exists at all."""
+    cfg = get_config("qwen2-7b").reduced()
+    rng = np.random.default_rng(0)
+    short = rng.integers(1, cfg.vocab_size, 5).astype(np.int32)
+    long_ = rng.integers(1, cfg.vocab_size, 12).astype(np.int32)
+
+    alone = Server(cfg, batch=1, max_seq=24, seed=0).serve_batch(
+        [Request(0, short, 1)])[0].generated
+
+    mixed = Server(cfg, batch=2, max_seq=24, seed=0).serve_batch(
+        [Request(0, short, 1), Request(1, long_, 1)])
+    by_uid = {r.uid: r.generated for r in mixed}
+    assert by_uid[0][0] == alone[0]
+    assert len(by_uid[1]) == 1

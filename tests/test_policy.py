@@ -85,7 +85,7 @@ def test_cohort_server_dqn_shifts_draws_from_stale_cluster():
     assign = srv.engine.state.result.assign
     stale = int(np.argmax(np.bincount(assign[true == 0], minlength=k)))
     srv.policy.agent.steps = 10_000     # read weights at ε = eps_end
-    w = srv.policy.draw_weights(srv._policy_state(assign))
+    w = srv.policy.draw_weights(srv._policy_state(assign, srv.embeds))
     assert w[stale] < 1.0 / k
     assert int(np.argmax(w)) != stale
 
