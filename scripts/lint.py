@@ -1,0 +1,21 @@
+#!/usr/bin/env python
+"""repro-lint CLI shim: runs without an install or PYTHONPATH.
+
+    python scripts/lint.py --check          # CI gate
+    python scripts/lint.py --list-rules
+    python scripts/lint.py --update-baseline
+
+Equivalent to ``python -m repro.analysis`` / the ``repro-lint`` entry
+point; see docs/ANALYSIS.md.
+"""
+
+import pathlib
+import sys
+
+REPO = pathlib.Path(__file__).resolve().parent.parent
+sys.path.insert(0, str(REPO / "src"))
+
+from repro.analysis.runner import main  # noqa: E402
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,29 @@
+"""repro-lint: JAX-aware static analysis for this tree.
+
+Three rule families over the codebase's correctness-critical layers —
+none of which a conventional linter can see:
+
+1. **Purity / tracing** (``repro.analysis.purity``) — host clocks, host
+   RNG, host syncs, and PRNG-key discipline inside any function
+   reachable from a ``jax.jit`` / ``shard_map`` / ``pl.pallas_call``
+   entry point.
+2. **Pallas kernel discipline** (``repro.analysis.pallas_rules``) —
+   every kernel wrapper plumbs ``interpret=``, declares its block sizes
+   static, and has a same-named pure-jnp oracle in ``ref.py``.
+3. **Lock discipline** (``repro.analysis.locks``) — ``# guarded-by:``
+   annotated attributes only mutate under their lock, and the static
+   lock-acquisition graph is cycle-free.  The runtime counterpart is
+   :mod:`repro.analysis.watchdog`.
+
+Run it as ``python scripts/lint.py``, ``python -m repro.analysis``, or
+the ``repro-lint`` entry point; see docs/ANALYSIS.md for the rule
+catalog, suppressions, and baseline workflow.
+"""
+
+from repro.analysis.findings import Finding, RULES
+from repro.analysis.runner import analyze_paths, main
+from repro.analysis.watchdog import (LockOrderError, OrderedLock,
+                                     SERVING_LOCK_ORDER, instrument)
+
+__all__ = ["Finding", "RULES", "analyze_paths", "main", "LockOrderError",
+           "OrderedLock", "SERVING_LOCK_ORDER", "instrument"]

@@ -1,0 +1,290 @@
+"""AST index of the tree: functions, imports, call edges, jit roots.
+
+The purity rules (``repro.analysis.purity``) only apply to code that jax
+actually traces, so the central question this module answers is *which
+functions are reachable from a trace entry point*.  A function is a
+**trace root** when it is
+
+* decorated with ``jax.jit`` (bare or via ``functools.partial(jax.jit,
+  static_argnames=...)``),
+* referenced inside a ``jax.jit(...)`` / ``shard_map(...)`` /
+  ``pl.pallas_call(...)`` call expression anywhere in the tree
+  (covers ``_grad = jax.jit(jax.value_and_grad(f))`` and kernel bodies
+  handed to ``pallas_call``), or
+* a lambda passed directly to one of those (the lambda body gets its
+  own synthetic :class:`FunctionInfo`).
+
+Reachability then follows call edges, resolved best-effort: bare names
+against the module's functions and ``from``-imports, ``alias.attr``
+against module import aliases, and ``self.method`` / ``Class.method``
+against the class table.  Unresolvable calls (``jnp.dot``, callbacks,
+higher-order arguments) are skipped — the analysis is deliberately an
+under-approximation that favors precision over recall; the fixture
+corpus pins the shapes it must catch.
+"""
+
+from __future__ import annotations
+
+import ast
+import dataclasses
+import pathlib
+from typing import Dict, Iterable, List, Optional, Set, Tuple
+
+#: call-expression heads whose function-valued arguments become trace
+#: roots.  Matched on the LAST attribute segment so aliasing
+#: (``from jax import jit``, ``pl.pallas_call``) doesn't matter.
+TRACE_ENTRY_HEADS = ("jit", "shard_map", "pallas_call")
+
+
+def dotted(node: ast.AST) -> Optional[str]:
+    """``a.b.c`` for a Name/Attribute chain, else None."""
+    parts: List[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+def _is_trace_entry(callnode: ast.Call) -> bool:
+    head = dotted(callnode.func)
+    return head is not None and head.split(".")[-1] in TRACE_ENTRY_HEADS
+
+
+@dataclasses.dataclass(eq=False)      # identity hash: usable in sets
+class FunctionInfo:
+    qualname: str                       # "fn", "Cls.fn", "Cls.fn.<lambda>"
+    node: ast.AST                       # FunctionDef / Lambda
+    module: "ModuleIndex"
+    cls: Optional[str] = None           # enclosing class name
+    is_root: bool = False
+    calls: List[Tuple[str, int]] = dataclasses.field(default_factory=list)
+
+    @property
+    def static_argnames(self) -> Set[str]:
+        """Names declared static in a jax.jit decorator, if any."""
+        names: Set[str] = set()
+        for dec in getattr(self.node, "decorator_list", []):
+            if not isinstance(dec, ast.Call):
+                continue
+            head = dotted(dec.func)
+            if not head or head.split(".")[-1] not in ("partial", "jit"):
+                continue
+            for kw in dec.keywords:
+                if kw.arg == "static_argnames":
+                    for sub in ast.walk(kw.value):
+                        if isinstance(sub, ast.Constant) \
+                                and isinstance(sub.value, str):
+                            names.add(sub.value)
+        return names
+
+    @property
+    def params(self) -> Set[str]:
+        a = self.node.args
+        names = [p.arg for p in (a.posonlyargs + a.args + a.kwonlyargs)]
+        if a.vararg:
+            names.append(a.vararg.arg)
+        if a.kwarg:
+            names.append(a.kwarg.arg)
+        return set(names)
+
+    def collect_calls(self) -> None:
+        self.calls = [(head, n.lineno)
+                      for n in ast.walk(self.node)
+                      if isinstance(n, ast.Call)
+                      and (head := dotted(n.func)) is not None]
+
+
+class ModuleIndex:
+    """One parsed file: functions, classes, imports, jit-wrapped names."""
+
+    def __init__(self, path: pathlib.Path, rel: str, source: str):
+        self.path = path
+        self.rel = rel                          # repo-relative, "/" seps
+        self.source = source
+        self.tree = ast.parse(source, filename=str(path))
+        self.functions: Dict[str, FunctionInfo] = {}
+        self.classes: Dict[str, ast.ClassDef] = {}
+        #: local alias -> imported module dotted path ("T" -> "x.y.z")
+        self.import_modules: Dict[str, str] = {}
+        #: local name -> (module dotted path, original name)
+        self.import_names: Dict[str, Tuple[str, str]] = {}
+        #: module-level / class-attr names bound to jax.jit(...) results
+        self.jit_wrapped_names: Set[str] = set()
+        self._index()
+
+    # -- construction -----------------------------------------------------
+    def _index(self) -> None:
+        for node in ast.walk(self.tree):
+            if isinstance(node, (ast.Import, ast.ImportFrom)):
+                self._index_import(node)
+        for node in self.tree.body:
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                self._add_function(node, cls=None)
+            elif isinstance(node, ast.ClassDef):
+                self.classes[node.name] = node
+                for item in node.body:
+                    if isinstance(item, (ast.FunctionDef,
+                                         ast.AsyncFunctionDef)):
+                        self._add_function(item, cls=node.name)
+        self._index_roots()
+
+    def _index_import(self, node: ast.AST) -> None:
+        if isinstance(node, ast.Import):
+            for alias in node.names:
+                self.import_modules[alias.asname
+                                    or alias.name.split(".")[0]] = alias.name
+        elif isinstance(node, ast.ImportFrom) and node.module:
+            for alias in node.names:
+                local = alias.asname or alias.name
+                self.import_names[local] = (node.module, alias.name)
+
+    def _add_function(self, node, cls: Optional[str]) -> None:
+        qual = f"{cls}.{node.name}" if cls else node.name
+        info = FunctionInfo(qual, node, self, cls=cls)
+        info.collect_calls()
+        if any(self._jit_decorator(d) for d in node.decorator_list):
+            info.is_root = True
+        self.functions[qual] = info
+
+    @staticmethod
+    def _jit_decorator(dec: ast.AST) -> bool:
+        head = dotted(dec)
+        if head and head.split(".")[-1] == "jit":
+            return True
+        if isinstance(dec, ast.Call):
+            # functools.partial(jax.jit, ...) / partial(jit, ...)
+            h = dotted(dec.func)
+            if h and h.split(".")[-1] == "partial" and dec.args:
+                inner = dotted(dec.args[0])
+                return bool(inner) and inner.split(".")[-1] == "jit"
+            # jax.jit(...) used directly as a decorator factory
+            h = dotted(dec.func)
+            return bool(h) and h.split(".")[-1] == "jit"
+        return False
+
+    def _index_roots(self) -> None:
+        """Mark functions referenced inside jit/shard_map/pallas_call."""
+        lam_count = 0
+        for node in ast.walk(self.tree):
+            if not (isinstance(node, ast.Call) and _is_trace_entry(node)):
+                continue
+            for arg in list(node.args) + [kw.value for kw in node.keywords]:
+                for sub in ast.walk(arg):
+                    if isinstance(sub, ast.Lambda):
+                        lam_count += 1
+                        qual = f"<jit-lambda-{lam_count}>"
+                        info = FunctionInfo(qual, sub, self, is_root=True)
+                        info.collect_calls()
+                        self.functions[qual] = info
+                    else:
+                        name = None
+                        if isinstance(sub, ast.Name):
+                            name = sub.id
+                        elif isinstance(sub, ast.Attribute):
+                            name = sub.attr
+                        if name is None:
+                            continue
+                        for qual, fi in self.functions.items():
+                            if qual == name or qual.endswith(f".{name}"):
+                                fi.is_root = True
+        # module-level `X = jax.jit(...)` / `self.X = jax.jit(...)`
+        for node in ast.walk(self.tree):
+            if isinstance(node, ast.Assign) and isinstance(node.value,
+                                                           ast.Call):
+                if not _is_trace_entry(node.value):
+                    continue
+                for tgt in node.targets:
+                    if isinstance(tgt, ast.Name):
+                        self.jit_wrapped_names.add(tgt.id)
+                    elif isinstance(tgt, ast.Attribute):
+                        self.jit_wrapped_names.add(tgt.attr)
+
+
+class TreeIndex:
+    """All modules of one analysis run plus cross-module resolution."""
+
+    def __init__(self, files: Iterable[Tuple[pathlib.Path, str]]):
+        self.modules: Dict[str, ModuleIndex] = {}
+        #: dotted module path guess -> ModuleIndex (for import resolution)
+        self._by_dotted: Dict[str, ModuleIndex] = {}
+        for path, rel in files:
+            mi = ModuleIndex(path, rel, path.read_text())
+            self.modules[rel] = mi
+            self._by_dotted[self._dotted_of(rel)] = mi
+
+    @staticmethod
+    def _dotted_of(rel: str) -> str:
+        parts = pathlib.PurePosixPath(rel).with_suffix("").parts
+        # strip a leading src/ layout segment if present
+        if parts and parts[0] == "src":
+            parts = parts[1:]
+        return ".".join(parts)
+
+    def sources(self) -> Dict[str, str]:
+        return {rel: mi.source for rel, mi in self.modules.items()}
+
+    # -- resolution -------------------------------------------------------
+    def resolve(self, mi: ModuleIndex, caller: FunctionInfo,
+                head: str) -> Optional[FunctionInfo]:
+        """Best-effort: call head string -> FunctionInfo in the tree."""
+        parts = head.split(".")
+        if len(parts) == 1:
+            name = parts[0]
+            if name in mi.functions:
+                return mi.functions[name]
+            if name in mi.import_names:
+                modpath, orig = mi.import_names[name]
+                target = self._module_for(modpath)
+                if target and orig in target.functions:
+                    return target.functions[orig]
+            return None
+        base, rest = parts[0], parts[1:]
+        if base in ("self", "cls") and caller.cls and len(rest) == 1:
+            return mi.functions.get(f"{caller.cls}.{rest[0]}")
+        if base in mi.import_modules and len(rest) == 1:
+            target = self._module_for(mi.import_modules[base])
+            if target:
+                return target.functions.get(rest[0])
+        if base in mi.import_names and len(rest) == 1:
+            modpath, orig = mi.import_names[base]
+            # `from repro.models import transformer as T` -> T.lm_prefill
+            target = self._module_for(f"{modpath}.{orig}")
+            if target:
+                return target.functions.get(rest[0])
+            # `from x import Cls` -> Cls.method
+            target = self._module_for(modpath)
+            if target and orig in target.classes:
+                return target.functions.get(f"{orig}.{rest[0]}")
+        if base in mi.classes and len(rest) == 1:
+            return mi.functions.get(f"{base}.{rest[0]}")
+        return None
+
+    def _module_for(self, modpath: str) -> Optional[ModuleIndex]:
+        return self._by_dotted.get(modpath)
+
+    def is_jit_wrapped_call(self, mi: ModuleIndex, head: str) -> bool:
+        """True if `head` names a value produced by jax.jit(...)."""
+        last = head.split(".")[-1]
+        return last in mi.jit_wrapped_names
+
+    # -- reachability -----------------------------------------------------
+    def traced_functions(self) -> Set[FunctionInfo]:
+        """Every function reachable from a trace root (roots included)."""
+        work = [fi for mi in self.modules.values()
+                for fi in mi.functions.values() if fi.is_root]
+        seen: Set[int] = set()
+        out: Set[FunctionInfo] = set()
+        while work:
+            fi = work.pop()
+            if id(fi) in seen:
+                continue
+            seen.add(id(fi))
+            out.add(fi)
+            for head, _ in fi.calls:
+                callee = self.resolve(fi.module, fi, head)
+                if callee is not None and id(callee) not in seen:
+                    work.append(callee)
+        return out

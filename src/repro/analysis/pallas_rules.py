@@ -1,0 +1,139 @@
+"""Rule family 2: Pallas kernel-wrapper discipline.
+
+The kernels package convention (``src/repro/kernels``): every kernel
+lives in ``<name>_pallas.py`` as a public wrapper ``<name>_pallas(...)``
+around ``pl.pallas_call``, with a pure-jnp oracle ``<name>_ref`` in the
+sibling ``ref.py``.  Three machine-checked rules keep that convention
+honest:
+
+* ``pallas-interpret``   — the wrapper must take an ``interpret``
+  parameter and pass ``interpret=`` through to ``pl.pallas_call``;
+  otherwise the kernel cannot run on the CPU CI (or be cross-checked
+  against its oracle) at all.
+* ``pallas-static-args`` — block-size parameters (``block_*``) and
+  ``interpret`` shape the grid/specs, so they must be declared static
+  (``functools.partial(jax.jit, static_argnames=(...))``); a traced
+  block size fails at trace time, an unjitted wrapper silently
+  retraces downstream.
+* ``pallas-ref-oracle``  — for every ``<name>_pallas`` wrapper a
+  ``<name>_ref`` symbol must exist in the package's ``ref.py``
+  (cross-checked by symbol table, aliases count).
+"""
+
+from __future__ import annotations
+
+import ast
+import pathlib
+from typing import List, Optional, Set
+
+from repro.analysis.callgraph import ModuleIndex, TreeIndex, dotted
+from repro.analysis.findings import Finding
+
+
+def _src_line(mi: ModuleIndex, line: int) -> str:
+    lines = mi.source.splitlines()
+    return lines[line - 1].strip() if 0 < line <= len(lines) else ""
+
+
+def _pallas_calls(fn: ast.AST) -> List[ast.Call]:
+    out = []
+    for node in ast.walk(fn):
+        if isinstance(node, ast.Call):
+            head = dotted(node.func)
+            if head and head.split(".")[-1] == "pallas_call":
+                out.append(node)
+    return out
+
+
+def _static_argnames(fn: ast.FunctionDef) -> Optional[Set[str]]:
+    """static_argnames of a partial(jax.jit, ...) decorator, if any."""
+    for dec in fn.decorator_list:
+        if not isinstance(dec, ast.Call):
+            continue
+        head = dotted(dec.func)
+        if not head or head.split(".")[-1] not in ("partial", "jit"):
+            continue
+        for kw in dec.keywords:
+            if kw.arg == "static_argnames":
+                names: Set[str] = set()
+                for sub in ast.walk(kw.value):
+                    if isinstance(sub, ast.Constant) \
+                            and isinstance(sub.value, str):
+                        names.add(sub.value)
+                return names
+    return None
+
+
+def _ref_symbols(tree: TreeIndex, mi: ModuleIndex) -> Optional[Set[str]]:
+    """Top-level symbols of the sibling ref.py, if one is indexed."""
+    ref_rel = str(pathlib.PurePosixPath(mi.rel).parent / "ref.py")
+    ref = tree.modules.get(ref_rel)
+    if ref is None:
+        return None
+    symbols = set(ref.functions)
+    for node in ref.tree.body:                 # aliases: `x_ref = y_ref`
+        if isinstance(node, ast.Assign):
+            for tgt in node.targets:
+                if isinstance(tgt, ast.Name):
+                    symbols.add(tgt.id)
+    return symbols
+
+
+def check(tree: TreeIndex) -> List[Finding]:
+    findings: List[Finding] = []
+    for rel, mi in sorted(tree.modules.items()):
+        for qual, fi in sorted(mi.functions.items()):
+            fn = fi.node
+            if not isinstance(fn, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                continue
+            calls = _pallas_calls(fn)
+            if not calls:
+                continue
+            params = fi.params
+
+            # interpret= must be a wrapper parameter AND reach the call
+            plumbed = any(kw.arg == "interpret"
+                          for c in calls for kw in c.keywords)
+            if "interpret" not in params or not plumbed:
+                findings.append(Finding(
+                    rule="pallas-interpret", path=rel, line=fn.lineno,
+                    symbol=qual, source=_src_line(mi, fn.lineno),
+                    message=(f"'{qual}' wraps pl.pallas_call but does not "
+                             f"plumb an interpret= kwarg through — the "
+                             f"kernel cannot run off-TPU for oracle "
+                             f"cross-checks")))
+
+            # static declaration of block sizes (+ interpret)
+            need_static = {p for p in params if p.startswith("block")}
+            if "interpret" in params:
+                need_static.add("interpret")
+            if need_static:
+                declared = _static_argnames(fn)
+                missing = (need_static if declared is None
+                           else need_static - declared)
+                if missing:
+                    findings.append(Finding(
+                        rule="pallas-static-args", path=rel,
+                        line=fn.lineno, symbol=qual,
+                        source=_src_line(mi, fn.lineno),
+                        message=(f"'{qual}': parameters "
+                                 f"{sorted(missing)} shape the grid/"
+                                 f"specs but are not in jax.jit "
+                                 f"static_argnames (declare via "
+                                 f"functools.partial(jax.jit, "
+                                 f"static_argnames=...))")))
+
+            # same-named oracle in the package's ref.py
+            if qual.endswith("_pallas"):
+                symbols = _ref_symbols(tree, mi)
+                want = qual[: -len("_pallas")] + "_ref"
+                if symbols is not None and want not in symbols:
+                    findings.append(Finding(
+                        rule="pallas-ref-oracle", path=rel,
+                        line=fn.lineno, symbol=qual,
+                        source=_src_line(mi, fn.lineno),
+                        message=(f"'{qual}' has no oracle '{want}' in "
+                                 f"{pathlib.PurePosixPath(rel).parent}/"
+                                 f"ref.py — every kernel needs a pure-"
+                                 f"jnp ground truth")))
+    return findings

@@ -1,0 +1,139 @@
+"""Runtime lock-order watchdog: assert the static order at acquisition.
+
+The static analyzer (:mod:`repro.analysis.locks`) proves the lock-
+acquisition *graph* is cycle-free; this module enforces the same
+discipline dynamically in debug builds and threaded tests, where the
+static analysis can't see through callbacks (e.g. the frontend's
+``sizes_fn`` seal closure acquiring the tenant lock inside the server's
+select lock).
+
+:class:`OrderedLock` wraps a real lock with a numeric **rank**; a thread
+may only acquire a lock whose rank is strictly greater than every lock
+it already holds.  A violation raises :class:`LockOrderError`
+immediately — turning a once-in-a-blue-moon deadlock hang into a
+deterministic test failure at the exact acquisition site.
+
+The canonical ranks for the serving stack (ascending = outermost
+first)::
+
+    SERVING_LOCK_ORDER = {
+        "_registry_lock": 5,    # CohortFrontend tenant registry
+        "_write_lock": 10,      # CohortServer embedding-table writer
+        "_select_lock": 20,     # CohortServer single-writer select
+        "lock": 30,             # _Tenant batch bookkeeping (via seal)
+        "_stats_lock": 40,      # CohortServer counters (innermost)
+    }
+
+``instrument(obj, ranks)`` swaps an object's lock attributes for
+watchdogged wrappers in place — used by ``tests/test_frontend.py`` to
+run the coalescing herd with order assertions on.
+"""
+
+from __future__ import annotations
+
+import threading
+from typing import Dict, List, Optional
+
+#: canonical acquisition order of the cohort-serving stack; see
+#: docs/ANALYSIS.md ("Lock discipline") for the derivation.
+SERVING_LOCK_ORDER: Dict[str, int] = {
+    "_registry_lock": 5,
+    "_write_lock": 10,
+    "_select_lock": 20,
+    "lock": 30,
+    "_stats_lock": 40,
+}
+
+
+class LockOrderError(RuntimeError):
+    """A thread acquired locks against the declared rank order."""
+
+
+class _Held(threading.local):
+    def __init__(self):
+        self.stack: List["OrderedLock"] = []
+
+
+_held = _Held()
+
+
+class OrderedLock:
+    """A lock wrapper asserting rank order at every acquisition.
+
+    Drop-in for the ``with``-statement and ``acquire``/``release``
+    subset of the :class:`threading.Lock` interface the serving stack
+    uses.  Re-acquiring an already-held rank is also rejected (the
+    serving locks are non-reentrant).
+    """
+
+    def __init__(self, name: str, rank: int,
+                 lock: Optional[threading.Lock] = None):
+        self.name = name
+        self.rank = rank
+        self._lock = lock if lock is not None else threading.Lock()
+
+    def _check(self) -> None:
+        for held in _held.stack:
+            if held.rank >= self.rank:
+                raise LockOrderError(
+                    f"lock-order violation: acquiring {self.name!r} "
+                    f"(rank {self.rank}) while holding {held.name!r} "
+                    f"(rank {held.rank}); declared order requires "
+                    f"strictly increasing ranks")
+
+    def acquire(self, blocking: bool = True, timeout: float = -1) -> bool:
+        self._check()
+        got = (self._lock.acquire(blocking, timeout) if timeout != -1
+               else self._lock.acquire(blocking))
+        if got:
+            _held.stack.append(self)
+        return got
+
+    def release(self) -> None:
+        if _held.stack and _held.stack[-1] is self:
+            _held.stack.pop()
+        else:  # out-of-LIFO release: still drop our entry if present
+            for i in range(len(_held.stack) - 1, -1, -1):
+                if _held.stack[i] is self:
+                    del _held.stack[i]
+                    break
+        self._lock.release()
+
+    def __enter__(self) -> "OrderedLock":
+        self.acquire()
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.release()
+
+    def locked(self) -> bool:
+        return self._lock.locked()
+
+
+def held_names() -> List[str]:
+    """Names of the locks the calling thread currently holds."""
+    return [lk.name for lk in _held.stack]
+
+
+def instrument(obj, ranks: Optional[Dict[str, int]] = None,
+               prefix: str = "") -> List[str]:
+    """Replace ``obj``'s lock attributes with :class:`OrderedLock`.
+
+    Every attribute of ``obj`` named in ``ranks`` (default
+    :data:`SERVING_LOCK_ORDER`) that currently holds a lock-like object
+    is swapped for an ``OrderedLock`` of that rank.  Returns the names
+    instrumented.  ``prefix`` disambiguates instances in error messages
+    (e.g. the tenant name).
+    """
+    ranks = ranks if ranks is not None else SERVING_LOCK_ORDER
+    done = []
+    for attr, rank in ranks.items():
+        cur = getattr(obj, attr, None)
+        if cur is None or isinstance(cur, OrderedLock):
+            continue
+        if not (hasattr(cur, "acquire") and hasattr(cur, "release")):
+            continue
+        name = f"{prefix}{type(obj).__name__}.{attr}"
+        setattr(obj, attr, OrderedLock(name, rank))
+        done.append(attr)
+    return done

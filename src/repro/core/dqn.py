@@ -111,6 +111,7 @@ class DQNAgent:
         self.train_calls = 0
         # plain SGD-with-momentum on the TD loss
         self.mu = jax.tree.map(jnp.zeros_like, self.params)
+        self._last_loss = 0.0              # device scalar after training
 
     # -- acting -----------------------------------------------------------
     def epsilon(self) -> float:
@@ -132,7 +133,15 @@ class DQNAgent:
         self.buffer.add(np.asarray(s, np.float32), a, r,
                         np.asarray(s2, np.float32), done)
 
-    def train_step(self, rng: np.random.Generator) -> float:
+    def train_step(self, rng: np.random.Generator):
+        """One TD minibatch; returns the loss as a DEVICE scalar.
+
+        Deliberately no ``float()`` here: the serving path runs this
+        under its select lock (``CohortServer.observe_round``), and a
+        host sync would stall every concurrent select on device
+        compute.  Materialize lazily via :attr:`last_loss` (the stats
+        endpoint does).
+        """
         if self.buffer.size < 8:
             return 0.0
         batch = self.buffer.sample(rng, self.cfg.batch_size)
@@ -145,4 +154,10 @@ class DQNAgent:
         self.train_calls += 1
         if self.train_calls % self.cfg.target_sync_every == 0:
             self.target_params = jax.tree.map(jnp.copy, self.params)
-        return float(loss)
+        self._last_loss = loss
+        return loss
+
+    @property
+    def last_loss(self) -> float:
+        """Most recent TD loss, materialized on demand (syncs here)."""
+        return float(self._last_loss)

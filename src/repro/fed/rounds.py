@@ -175,6 +175,9 @@ class FederatedRunner:
         t_aggregate = time.perf_counter()
 
         acc, loss, _ = evaluate(self.global_params, self.x_test, self.y_test)
+        # round boundary: accuracy immediately drives the host-side
+        # reward shaping and policy update, so this sync is inherent
+        # repro-lint: ignore[jax-blocking-sync]
         acc = float(acc)
         t_evaluate = time.perf_counter()
         reward = favor_reward(acc, c.target_accuracy)
@@ -183,6 +186,7 @@ class FederatedRunner:
                            Feedback(acc, reward, selected))
         self.prev_acc = acc
         t_update = time.perf_counter()
+        # repro-lint: ignore[jax-blocking-sync] — same round boundary
         res = RoundResult(self.round_idx, acc, float(loss), reward, selected,
                           t_update - t0,
                           timings={"select": t_select - t0,

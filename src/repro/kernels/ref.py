@@ -57,6 +57,16 @@ def attention_ref(q, k, v, *, causal=True, window=None, scale=None):
     return out.reshape(B, S, H, v.shape[-1]).astype(v.dtype)
 
 
+def flash_attention_ref(q, k, v, *, causal=True, window=None, scale=None):
+    """Oracle for ``flash_attention_pallas``: same math, no tiling.
+
+    The blocked online-softmax schedule is an implementation detail —
+    semantically the kernel IS naive GQA attention, so the oracle
+    delegates to :func:`attention_ref`.
+    """
+    return attention_ref(q, k, v, causal=causal, window=window, scale=scale)
+
+
 def ssd_chunk_ref(xdt, cs, Bm, Cm):
     """Intra-chunk SSD reference (what the Pallas kernel computes).
 

@@ -105,8 +105,8 @@ class _Tenant:
         self.name = name
         self.server = server
         self.lock = threading.Lock()
-        self.open_batch: Optional[_Batch] = None
-        self.max_batch = 0
+        self.open_batch: Optional[_Batch] = None    # guarded-by: lock
+        self.max_batch = 0                          # guarded-by: lock
 
 
 class CohortFrontend:
@@ -129,7 +129,7 @@ class CohortFrontend:
                  *, batch_window_s: float = DEFAULT_BATCH_WINDOW_S):
         self.batch_window_s = float(batch_window_s)
         self._registry_lock = threading.Lock()
-        self._tenants: Dict[str, _Tenant] = {}
+        self._tenants: Dict[str, _Tenant] = {}  # guarded-by: _registry_lock
         if tenants is not None:
             if isinstance(tenants, Mapping):
                 for name, server in tenants.items():

@@ -224,22 +224,34 @@ class CohortServer:
 
         table = np.zeros((num_clients, embed_dim), np.float32)
         table.setflags(write=False)       # snapshots must stay immutable
-        self._snap = (0, table)           # (version, table), swapped whole
         self._write_lock = threading.Lock()
         self._select_lock = threading.Lock()
+        # leaf lock for dashboard state (innermost — see
+        # repro.analysis.watchdog.SERVING_LOCK_ORDER): counters and
+        # latency EMAs are mutated from BOTH the update path
+        # (_write_lock held) and the select path (_select_lock held)
+        # and read by stats(), so they need a lock of their own rather
+        # than whichever path's lock happened to be held.
+        self._stats_lock = threading.Lock()
+        # (version, table), swapped whole
+        self._snap = (0, table)           # guarded-by: _write_lock
 
-        self._participation = np.zeros(k, np.float64)
-        self._reward_ema = np.zeros(k, np.float32)
+        self._participation = np.zeros(k, np.float64)   # guarded-by: _select_lock
+        self._reward_ema = np.zeros(k, np.float32)      # guarded-by: _select_lock
         # selects since each cluster last contributed a served client
         # (the "rich" state's staleness feature)
-        self._staleness = np.zeros(k, np.float64)
-        self.prev_accuracy = 0.0
-        self._pending = None              # (state_vec, actions, assign, table)
-        self._latency = {"solve_s": 0.0, "draw_s": 0.0, "total_s": 0.0}
-        self._round_timings: dict = {}    # running means per phase
-        self._counters = {"requests": 0, "batches": 0, "updates": 0,
-                          "rounds_observed": 0, "dropped_transitions": 0}
-        self.last_select_s = 0.0
+        self._staleness = np.zeros(k, np.float64)       # guarded-by: _select_lock
+        self.prev_accuracy = 0.0                        # guarded-by: _select_lock
+        # parked (state_vec, actions, assign, table) until observe_round
+        self._pending = None                            # guarded-by: _select_lock
+        self._latency = {  # guarded-by: _stats_lock
+            "solve_s": 0.0, "draw_s": 0.0, "total_s": 0.0}
+        # running means per RoundResult.timings phase
+        self._round_timings: dict = {}                  # guarded-by: _stats_lock
+        self._counters = {  # guarded-by: _stats_lock
+            "requests": 0, "batches": 0, "updates": 0,
+            "rounds_observed": 0, "dropped_transitions": 0}
+        self.last_select_s = 0.0                        # guarded-by: _select_lock
 
     # -- embedding table (versioned copy-on-write) -----------------------
     @property
@@ -273,13 +285,17 @@ class CohortServer:
             table[ids] = rows
             table.setflags(write=False)
             self._snap = (version + 1, table)
+        with self._stats_lock:
             self._counters["updates"] += 1
 
     # -- serving ----------------------------------------------------------
     def _ema(self, name: str, value: float) -> None:
-        prev = self._latency[name]
-        self._latency[name] = (value if self._counters["requests"] == 0
-                               else prev + _LATENCY_EMA * (value - prev))
+        """Fold one latency sample into the EMA (takes the stats lock)."""
+        with self._stats_lock:
+            prev = self._latency[name]
+            self._latency[name] = (
+                value if self._counters["requests"] == 0
+                else prev + _LATENCY_EMA * (value - prev))
 
     def _policy_state(self, assign: np.ndarray,
                       table: np.ndarray) -> np.ndarray:
@@ -361,7 +377,8 @@ class CohortServer:
                     # round report replaces the parked transition, and
                     # the earlier draw is never learned from — count it
                     # so the dashboard can see mis-sequenced callers
-                    self._counters["dropped_transitions"] += 1
+                    with self._stats_lock:
+                        self._counters["dropped_transitions"] += 1
                 self._pending = (state, all_actions, res.assign, table)
             else:
                 for pool in pools.values():
@@ -387,8 +404,9 @@ class CohortServer:
             self._ema("solve_s", t_solve - t0)
             self._ema("draw_s", t1 - t_solve)
             self._ema("total_s", t1 - t0)
-            self._counters["requests"] += len(sizes)
-            self._counters["batches"] += 1
+            with self._stats_lock:
+                self._counters["requests"] += len(sizes)
+                self._counters["batches"] += 1
             self.last_select_s = t1 - t0
             return [(picked, res) for picked in cohorts]
 
@@ -424,13 +442,14 @@ class CohortServer:
                 self._pending = None
             else:
                 self.prev_accuracy = accuracy
-            if timings:
-                n = self._counters["rounds_observed"]
-                for phase, seconds in timings.items():
-                    prev = self._round_timings.get(phase, 0.0)
-                    self._round_timings[phase] = (
-                        prev + (seconds - prev) / (n + 1))
-            self._counters["rounds_observed"] += 1
+            with self._stats_lock:
+                if timings:
+                    n = self._counters["rounds_observed"]
+                    for phase, seconds in timings.items():
+                        prev = self._round_timings.get(phase, 0.0)
+                        self._round_timings[phase] = (
+                            prev + (seconds - prev) / (n + 1))
+                self._counters["rounds_observed"] += 1
         return reward
 
     def stats(self) -> dict:
@@ -454,14 +473,20 @@ class CohortServer:
         policy = {"kind": self.policy_name}
         if self.policy is not None:
             policy.update(self.policy.stats())
+        # one consistent snapshot of the dashboard state; the copies
+        # also keep callers from mutating the live dicts
+        with self._stats_lock:
+            counters = dict(self._counters)
+            latency = dict(self._latency)
+            round_timings = dict(self._round_timings)
         return {
-            **dict(self._counters),
+            **counters,
             "table_version": self.version,
             "num_clients": self.embeds.shape[0],
             "state_features": self.state_features,
             "engine": dict(self.engine.stats),
-            "latency_s": dict(self._latency),
-            "round_timings_s": dict(self._round_timings),
+            "latency_s": latency,
+            "round_timings_s": round_timings,
             "last_select": None if last is None else {
                 "method": last.method, "source": last.source,
                 "drift": last.drift, "k": last.k,

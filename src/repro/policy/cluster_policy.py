@@ -66,7 +66,7 @@ class ClusterPolicy:
                         **(dqn_overrides or {}))
         self.agent = DQNAgent(jax.random.PRNGKey(seed), cfg)
         self.rng = np.random.default_rng(seed)
-        self.last_loss = 0.0
+        self._last_loss = 0.0              # device scalar after train()
 
     def _check_state(self, state_vec: np.ndarray, caller: str) -> np.ndarray:
         """Fail fast on a wrong-length state with a readable error.
@@ -160,11 +160,22 @@ class ClusterPolicy:
         for a in actions:
             self.agent.observe(s, int(a), reward, s2)
 
-    def train(self, rng: Optional[np.random.Generator] = None) -> float:
-        """One TD minibatch step; returns (and remembers) the loss."""
-        self.last_loss = self.agent.train_step(
+    def train(self, rng: Optional[np.random.Generator] = None):
+        """One TD minibatch step; returns (and remembers) the loss.
+
+        The return value is a DEVICE scalar — ``CohortServer`` calls
+        this under its select lock, so forcing a host sync here would
+        stall concurrent selects.  :attr:`last_loss` materializes it
+        lazily when the stats endpoint asks.
+        """
+        self._last_loss = self.agent.train_step(
             rng if rng is not None else self.rng)
-        return self.last_loss
+        return self._last_loss
+
+    @property
+    def last_loss(self) -> float:
+        """Most recent TD loss, materialized on demand (syncs here)."""
+        return float(self._last_loss)
 
     def stats(self) -> dict:
         """Serving-dashboard counters: ε, steps, replay fill, last loss."""

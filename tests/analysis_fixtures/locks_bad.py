@@ -1,0 +1,31 @@
+"""Fixture: lock-discipline violations (parsed, not run).
+
+* ``unguarded_mutation`` writes a ``# guarded-by:`` attribute without
+  holding its lock (``lock-guarded-by``).
+* ``ab`` / ``ba`` acquire the two locks in opposite orders
+  (``lock-order-cycle``).
+"""
+import threading
+
+
+class BadServer:
+    def __init__(self):
+        self._a_lock = threading.Lock()
+        self._b_lock = threading.Lock()
+        self._state = {}                  # guarded-by: _a_lock
+
+    def unguarded_mutation(self, key, value):
+        self._state[key] = value          # mutated without _a_lock
+
+    def unguarded_mutator_call(self, other):
+        self._state.update(other)         # container mutator, no lock
+
+    def ab(self):
+        with self._a_lock:
+            with self._b_lock:
+                return len(self._state)
+
+    def ba(self):
+        with self._b_lock:
+            with self._a_lock:
+                self._state.clear()       # held, so not a guard finding

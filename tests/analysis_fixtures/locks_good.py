@@ -1,0 +1,30 @@
+"""Fixture: lock discipline done right (parsed, not run)."""
+import threading
+
+
+class GoodServer:
+    def __init__(self):
+        self._table_lock = threading.Lock()
+        self._stats_lock = threading.Lock()
+        self._table = {}                  # guarded-by: _table_lock
+        self._counters = {"hits": 0}      # guarded-by: _stats_lock
+
+    def write(self, key, value):
+        with self._table_lock:
+            self._table[key] = value
+        # consistent global order: _table_lock before _stats_lock
+        with self._stats_lock:
+            self._counters["hits"] += 1
+
+    def nested(self, key, value):
+        with self._table_lock:
+            self._table[key] = value
+            self._bump()                  # callee takes the inner lock
+
+    def _bump(self):
+        with self._stats_lock:
+            self._counters["hits"] += 1
+
+    def read(self):
+        with self._stats_lock:
+            return dict(self._counters)

@@ -1,0 +1,22 @@
+"""Fixture: a non-compliant Pallas wrapper (parsed, not run).
+
+Violates all three kernel rules: no ``interpret=`` plumbing, block size
+not declared static, and no ``shift_ref`` oracle in the sibling ref.py.
+"""
+import functools
+
+import jax
+from jax.experimental import pallas as pl
+
+
+def _shift_kernel(x_ref, o_ref):
+    o_ref[...] = x_ref[...] + 1.0
+
+
+def shift_pallas(x, *, block_rows: int = 128):
+    grid = (x.shape[0] // block_rows,)
+    return pl.pallas_call(
+        _shift_kernel,
+        grid=grid,
+        out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+    )(x)

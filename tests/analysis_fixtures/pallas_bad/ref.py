@@ -1,0 +1,5 @@
+"""Fixture: sibling ref.py WITHOUT the shift_ref oracle."""
+
+
+def unrelated_ref(x):
+    return x

@@ -1,0 +1,20 @@
+"""Fixture: a compliant Pallas wrapper (parsed, not run)."""
+import functools
+
+import jax
+from jax.experimental import pallas as pl
+
+
+def _scale_kernel(x_ref, o_ref, *, factor):
+    o_ref[...] = x_ref[...] * factor
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
+def scale_pallas(x, *, block_rows: int = 128, interpret: bool = False):
+    grid = (x.shape[0] // block_rows,)
+    return pl.pallas_call(
+        functools.partial(_scale_kernel, factor=2.0),
+        grid=grid,
+        out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+        interpret=interpret,
+    )(x)

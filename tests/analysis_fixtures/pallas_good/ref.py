@@ -1,0 +1,5 @@
+"""Fixture: sibling oracle for pallas_good/kernel_pallas.py."""
+
+
+def scale_ref(x):
+    return x * 2.0

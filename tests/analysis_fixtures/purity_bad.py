@@ -1,0 +1,62 @@
+"""Fixture: every purity/PRNG rule violated once (parsed, not run)."""
+import random
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@jax.jit
+def host_time(x):
+    t = time.time()                      # jax-host-time
+    return x + t
+
+
+@jax.jit
+def host_random(x):
+    noise = np.random.normal(size=3)     # jax-host-random
+    r = random.random()                  # jax-host-random (stdlib)
+    return x + noise + r
+
+
+@jax.jit
+def host_sync(x):
+    a = x.item()                         # jax-host-sync
+    b = float(x)                         # jax-host-sync
+    c = np.asarray(x)                    # jax-host-sync
+    return a + b + c.sum()
+
+
+@jax.jit
+def constant_key(x):
+    key = jax.random.PRNGKey(0)          # prng-constant-key
+    noise = jax.random.normal(jax.random.PRNGKey(1), x.shape)  # also
+    return x + jax.random.normal(key, x.shape) + noise
+
+
+@jax.jit
+def key_reuse(key, x):
+    a = jax.random.normal(key, x.shape)
+    b = jax.random.uniform(key, x.shape)  # prng-key-reuse
+    return x + a + b
+
+
+@jax.jit
+def reaches_helper(x):
+    return _helper(x)
+
+
+def _helper(x):
+    # reachable from the jitted root above -> still traced code
+    return x * time.perf_counter()       # jax-host-time
+
+
+@jax.jit
+def _scalar_loss(x):
+    return jnp.sum(x * x)
+
+
+def hot_path(x):
+    loss = _scalar_loss(x)
+    return float(loss)                   # jax-blocking-sync

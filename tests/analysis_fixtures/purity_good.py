@@ -1,0 +1,46 @@
+"""Fixture: the same shapes as purity_bad, done right (parsed, not run)."""
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@jax.jit
+def timestamp_as_arg(x, now):
+    # the clock value is threaded in by the caller, not read in-trace
+    return x + now
+
+
+@jax.jit
+def device_random(key, x):
+    # key enters as a parameter; derived keys come from split/fold_in
+    k1, k2 = jax.random.split(key)
+    a = jax.random.normal(k1, x.shape)
+    b = jax.random.uniform(k2, x.shape)
+    k3 = jax.random.fold_in(key, 7)
+    return x + a + b + jax.random.normal(k3, x.shape)
+
+
+@jax.jit
+def stays_on_device(x):
+    # no .item()/float()/np.asarray(): everything stays jnp
+    return jnp.sum(x.astype(jnp.float32))
+
+
+@functools.partial(jax.jit, static_argnames=("scale",))
+def static_concretization(x, scale):
+    # float() on a static argname is trace-time Python, not a sync
+    return x * float(scale)
+
+
+def outside_trace(x):
+    # host-side code may use host RNG and materialize freely
+    rng = np.random.default_rng(0)
+    return float(np.sum(x)) + rng.random()
+
+
+def observed_loss(agent):
+    # deferred materialization: the jitted result was stored earlier
+    # and is only converted at the observation point
+    return agent.last_loss

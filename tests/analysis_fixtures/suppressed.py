@@ -1,0 +1,31 @@
+"""Fixture: violations silenced by inline suppressions (parsed, not run)."""
+import time
+
+import jax
+import numpy as np
+
+
+@jax.jit
+def same_line(x):
+    t = time.time()  # repro-lint: ignore[jax-host-time] fixture rationale
+    return x + t
+
+
+@jax.jit
+def line_above(x):
+    # repro-lint: ignore[prng-constant-key]
+    key = jax.random.PRNGKey(0)
+    return x + jax.random.normal(key, x.shape)
+
+
+@jax.jit
+def blanket(x):
+    noise = np.random.rand()  # repro-lint: ignore
+    return x + noise
+
+
+@jax.jit
+def wrong_rule_listed(x):
+    # a suppression for a DIFFERENT rule must not silence this one
+    t = time.time()  # repro-lint: ignore[prng-key-reuse]
+    return x + t

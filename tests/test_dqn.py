@@ -62,3 +62,18 @@ def test_act_greedy_after_decay():
     agent.steps = 10_000          # epsilon at floor
     acts = [agent.act(rng, s) for _ in range(20)]
     assert np.mean(acts) > 0.7
+
+
+def test_train_step_defers_host_sync_last_loss_lazy():
+    """Regression (repro-lint jax-blocking-sync): train_step must return
+    the loss as a device scalar — the serving path calls it under the
+    select lock — and materialize only via the last_loss property."""
+    agent = mk_agent()
+    rng = np.random.default_rng(0)
+    for _ in range(16):
+        s = rng.normal(size=4).astype(np.float32)
+        agent.observe(s, int(rng.integers(2)), 1.0, s)
+    out = agent.train_step(rng)
+    assert not isinstance(out, float)      # stayed on device
+    assert isinstance(agent.last_loss, float)
+    assert np.isfinite(agent.last_loss)

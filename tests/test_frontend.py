@@ -258,3 +258,51 @@ def test_cluster_policy_wrong_length_state_clear_error():
     with pytest.raises(ValueError, match="ClusterPolicy.observe"):
         pol.observe(np.zeros(16, np.float32), [0], 1.0,
                     np.zeros(9, np.float32))
+
+
+def test_watchdog_instrumented_stack_obeys_declared_lock_order():
+    """Satellite of the repro-lint lock rules: run the serving stack
+    with every lock swapped for a rank-asserting
+    :class:`repro.analysis.OrderedLock` and hammer it from selector /
+    updater / observer / stats threads.  This covers the one edge the
+    static analyzer cannot see — ``select_cohorts`` (holding
+    ``_select_lock``) calling back into the frontend's ``seal`` closure,
+    which takes the tenant lock — and turns any future inversion into a
+    deterministic :class:`LockOrderError` instead of a rare deadlock.
+    """
+    from repro.analysis import instrument
+
+    fe = mk_frontend(tenants=2, n=120, k=3, policy="dqn", window=0.0)
+    assert instrument(fe) == ["_registry_lock"]
+    for name in fe.tenant_names:
+        tenant = fe._tenants[name]
+        assert instrument(tenant, prefix=f"{name}:") == ["lock"]
+        assert sorted(instrument(tenant.server, prefix=f"{name}:")) == [
+            "_select_lock", "_stats_lock", "_write_lock"]
+
+    errors, done = [], []
+    rng = np.random.default_rng(1)
+
+    def hammer(i):
+        name = fe.tenant_names[i % len(fe.tenant_names)]
+        server = fe.tenant(name)
+        try:
+            for r in range(4):
+                ids, _ = fe.select_cohort(name, 6)
+                server.observe_round(0.5 + 0.01 * len(ids),
+                                     timings={"train": 0.01})
+                server.update_embeddings(
+                    ids, rng.normal(size=(len(ids), 8)).astype(np.float32))
+                fe.stats()
+            done.append(i)
+        except Exception as exc:        # pragma: no cover - failure path
+            errors.append(exc)
+
+    threads = [threading.Thread(target=hammer, args=(i,))
+               for i in range(8)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join(timeout=120)
+    assert errors == []
+    assert len(done) == 8

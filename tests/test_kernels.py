@@ -112,3 +112,14 @@ def test_blocked_jnp_attention_matches_flash_kernel():
     a = blocked_attention(q, k, v, causal=True, q_chunk=16, kv_chunk=16)
     b = ops.flash_attention(q, k, v, causal=True, block_q=16, block_k=16)
     np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=2e-5)
+
+
+def test_flash_attention_ref_oracle_matches_attention_ref():
+    """Regression (repro-lint pallas-ref-oracle): the flash kernel's
+    same-named oracle exists in ref.py and equals the naive attention."""
+    q = jax.random.normal(KEY, (1, 16, 4, 8))
+    k = jax.random.normal(jax.random.fold_in(KEY, 1), (1, 16, 2, 8))
+    v = jax.random.normal(jax.random.fold_in(KEY, 2), (1, 16, 2, 8))
+    got = ref.flash_attention_ref(q, k, v, causal=True, window=8)
+    want = ref.attention_ref(q, k, v, causal=True, window=8)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want))

@@ -198,3 +198,37 @@ def test_cohort_server_concurrent_update_select_no_torn_reads():
     assert not torn, torn
     assert srv.version > 0
     assert srv.stats()["updates"] == srv.version
+
+
+def test_cluster_policy_train_returns_device_scalar_lazy_loss():
+    """Regression (repro-lint jax-blocking-sync): train() must not force
+    a host sync under the server's select lock; stats() materializes
+    the loss lazily through the last_loss property."""
+    pol = ClusterPolicy(3, state_dim=10, seed=0, dqn_overrides=FAST_DQN)
+    rng = np.random.default_rng(0)
+    s = rng.normal(size=10).astype(np.float32)
+    for _ in range(16):
+        pol.observe(s, [int(rng.integers(3))], 1.0, s)
+    out = pol.train(rng)
+    assert not isinstance(out, float)          # device scalar
+    assert isinstance(pol.last_loss, float)    # lazy materialization
+    assert pol.stats()["last_loss"] == pol.last_loss
+
+
+def test_cohort_server_stats_are_lock_protected_snapshots():
+    """Regression (repro-lint lock-guarded-by): dashboard counters live
+    behind their own _stats_lock, and stats() hands back copies —
+    mutating the returned dicts must not corrupt the live state."""
+    server, _ = mk_server(policy="stratified")
+    server.select_cohort(8)
+    st = server.stats()
+    st["latency_s"]["total_s"] = -1.0
+    st["round_timings_s"]["bogus"] = 1.0
+    st["requests"] = 10**6
+    st2 = server.stats()
+    assert st2["latency_s"]["total_s"] >= 0.0
+    assert "bogus" not in st2["round_timings_s"]
+    assert st2["requests"] == 1
+    # counters shared by the update path and the select path still agree
+    server.update_embeddings(np.arange(4), np.zeros((4, 8), np.float32))
+    assert server.stats()["updates"] == 2      # mk_server seeded 1 update
