@@ -13,6 +13,18 @@ so concurrency scales per shard), two ways:
   same-version requests ride one ``select_cohorts`` batch, amortizing
   all of the above over the whole batch.
 
+The **streaming** suite measures the regime the coalescing sweep holds
+fixed: continuous embedding churn.  A writer thread updates small row
+deltas nonstop while selects run, three ways — no churn at all
+(baseline: every select is a fingerprint-cache replay), churn against
+the plain inline server (every select pays a solve), and churn against
+the double-buffered streaming server (``repro.streaming``: a
+``BackgroundSolver`` warms the next version off the select path, so
+selects swap in finished results and never solve inline after
+warm-up).  Reported as p50/p99 select latency per phase; the
+acceptance gate is streaming p99 within 1.5x of the no-churn baseline
+with zero forced-inline solves after warm-up.
+
 Emits ``BENCH_serve.json`` (machine-readable sweep) next to the CSV
 rows.  The coalescing invariant is checked as it runs: after each
 measured phase every tenant's engine must still report exactly one
@@ -115,6 +127,108 @@ def bench_point(num_tenants: int, concurrency: int, *, num_clients: int,
             "one_solve_per_tenant_version": True}
 
 
+def _percentiles(lat: list) -> dict:
+    arr = np.asarray(lat)
+    return {"p50_s": float(np.percentile(arr, 50)),
+            "p99_s": float(np.percentile(arr, 99)),
+            "mean_s": float(arr.mean()), "samples": len(lat)}
+
+
+def bench_streaming(*, num_clients: int, cohort_size: int, iters: int,
+                    seed: int = 0) -> dict:
+    """p50/p99 select latency under continuous embedding churn.
+
+    Three phases on the same workload: **baseline** (static table —
+    every select replays the fingerprint cache), **churn_inline** (a
+    writer thread churns row deltas against the plain server, so every
+    select pays an inline solve), **churn_streaming** (same churn
+    against a ``StreamingSpec`` server — selects swap in
+    background-warmed results).  ``method="nystrom"`` is pinned so the
+    small CI table doesn't fall onto the dense eigh path and time out.
+    """
+    from repro.cohort import CohortConfig
+    from repro.launch.serve import CohortServer
+    from repro.streaming import StreamingSpec
+
+    k, d = 8, 8
+    delta_rows = 64
+    cfg = CohortConfig(num_clusters=k, method="nystrom")
+    table = _make_table(num_clients, d, k, seed)
+    lat_iters = iters * 5
+
+    def measure(srv) -> list:
+        lat = []
+        for _ in range(lat_iters):
+            t0 = time.perf_counter()
+            srv.select_cohort(cohort_size)
+            lat.append(time.perf_counter() - t0)
+        return lat
+
+    def churn(srv, stop, rng):
+        while not stop.is_set():
+            ids = rng.integers(0, num_clients, delta_rows)
+            rows = (table[ids]
+                    + 0.01 * rng.normal(size=(delta_rows, d))
+                    ).astype(np.float32)
+            srv.update_embeddings(ids, rows)
+            time.sleep(0.001)
+
+    def churned_phase(srv) -> list:
+        stop = threading.Event()
+        writer = threading.Thread(
+            target=churn, args=(srv, stop, np.random.default_rng(seed + 1)))
+        writer.start()
+        try:
+            return measure(srv)
+        finally:
+            stop.set()
+            writer.join()
+
+    # -- baseline: static table, cache replays ---------------------------
+    base_srv = CohortServer(num_clients, d, seed=seed, config=cfg)
+    base_srv.update_embeddings(np.arange(num_clients), table)
+    base_srv.select_cohort(cohort_size)           # cold solve out of band
+    baseline = measure(base_srv)
+
+    # -- churn against the plain inline server ---------------------------
+    inline_srv = CohortServer(num_clients, d, seed=seed, config=cfg)
+    inline_srv.update_embeddings(np.arange(num_clients), table)
+    inline_srv.select_cohort(cohort_size)
+    churn_inline = churned_phase(inline_srv)
+
+    # -- churn against the streaming double-buffer ------------------------
+    stream_srv = CohortServer(num_clients, d, seed=seed, config=cfg,
+                              streaming=StreamingSpec())
+    stream_srv.update_embeddings(np.arange(num_clients), table)
+    stream_srv.select_cohort(cohort_size)         # warm-up (forced inline)
+    deadline = time.perf_counter() + 60
+    while (stream_srv.stats()["warm_ahead"] < 1
+           and time.perf_counter() < deadline):
+        time.sleep(0.005)
+    inline_before = stream_srv.stats()["forced_inline"]
+    churn_streaming = churned_phase(stream_srv)
+    st = stream_srv.stats()
+    stream_srv.close()
+
+    rec = {
+        "suite": "streaming", "num_clients": num_clients,
+        "cohort_size": cohort_size, "delta_rows": delta_rows,
+        "phases": {"baseline": _percentiles(baseline),
+                   "churn_inline": _percentiles(churn_inline),
+                   "churn_streaming": _percentiles(churn_streaming)},
+        "forced_inline_after_warmup": st["forced_inline"] - inline_before,
+        "warm_ahead": st["warm_ahead"],
+        "served_warm": st["served_warm"],
+    }
+    rec["p99_ratio_vs_baseline"] = (
+        rec["phases"]["churn_streaming"]["p99_s"]
+        / max(rec["phases"]["baseline"]["p99_s"], 1e-9))
+    rec["p99_ratio_inline_vs_baseline"] = (
+        rec["phases"]["churn_inline"]["p99_s"]
+        / max(rec["phases"]["baseline"]["p99_s"], 1e-9))
+    return rec
+
+
 def run(csv_rows: list, *, num_clients: int = 20_000, cohort_size: int = 64,
         iters: int = 20, out: str = "BENCH_serve.json") -> list:
     records = []
@@ -138,10 +252,26 @@ def run(csv_rows: list, *, num_clients: int = 20_000, cohort_size: int = 64,
                   f"batched {rec['batched_sps']:,.1f} selects/s "
                   f"({rec['speedup']:.2f}x, batch factor "
                   f"{rec['batch_factor']:.2f})")
+    streaming = bench_streaming(num_clients=num_clients,
+                                cohort_size=cohort_size, iters=iters)
+    for phase, pct in streaming["phases"].items():
+        csv_rows.append((f"serve/streaming/{phase}",
+                         1e6 * pct["p99_s"],
+                         f"p50_us={1e6 * pct['p50_s']:.0f} "
+                         f"p99_us={1e6 * pct['p99_s']:.0f}"))
+    print(f"streaming churn: baseline p99 "
+          f"{1e6 * streaming['phases']['baseline']['p99_s']:.0f}us, "
+          f"inline p99 "
+          f"{1e6 * streaming['phases']['churn_inline']['p99_s']:.0f}us, "
+          f"streaming p99 "
+          f"{1e6 * streaming['phases']['churn_streaming']['p99_s']:.0f}us "
+          f"({streaming['p99_ratio_vs_baseline']:.2f}x baseline, "
+          f"{streaming['forced_inline_after_warmup']} inline solves "
+          f"after warm-up)")
     with open(out, "w") as fh:
-        json.dump({"unit": "selects_per_sec", "records": records}, fh,
-                  indent=2)
-    return records
+        json.dump({"unit": "selects_per_sec", "records": records,
+                   "streaming": streaming}, fh, indent=2)
+    return records, streaming
 
 
 def main() -> int:
@@ -162,9 +292,9 @@ def main() -> int:
         args.clients, args.iters = 2000, 8
 
     rows: list = []
-    records = run(rows, num_clients=args.clients,
-                  cohort_size=args.cohort_size, iters=args.iters,
-                  out=args.out)
+    records, streaming = run(rows, num_clients=args.clients,
+                             cohort_size=args.cohort_size, iters=args.iters,
+                             out=args.out)
     if args.check:
         worst = min(r["speedup"] for r in records
                     if r["concurrency"] == max(CONCURRENCY))
@@ -174,6 +304,22 @@ def main() -> int:
             return 1
         print(f"ok: batched >= {worst:.2f}x serialized at "
               f"{max(CONCURRENCY)} concurrent clients")
+        if streaming["forced_inline_after_warmup"] != 0:
+            print(f"FAIL: {streaming['forced_inline_after_warmup']} "
+                  f"inline solves after streaming warm-up (expected 0)")
+            return 1
+        # small-N CI boxes are noisy: allow 5ms absolute grace on top of
+        # the 1.5x relative gate the full-size sweep targets
+        p99_base = streaming["phases"]["baseline"]["p99_s"]
+        p99_stream = streaming["phases"]["churn_streaming"]["p99_s"]
+        if p99_stream > 1.5 * p99_base + 0.005:
+            print(f"FAIL: streaming p99 {p99_stream * 1e6:.0f}us under "
+                  f"churn exceeds 1.5x no-churn baseline "
+                  f"({p99_base * 1e6:.0f}us) + 5ms grace")
+            return 1
+        print(f"ok: streaming p99 under churn "
+              f"{streaming['p99_ratio_vs_baseline']:.2f}x baseline, "
+              f"0 inline solves after warm-up")
     return 0
 
 

@@ -18,15 +18,31 @@ first)::
 
     SERVING_LOCK_ORDER = {
         "_registry_lock": 5,    # CohortFrontend tenant registry
-        "_write_lock": 10,      # CohortServer embedding-table writer
-        "_select_lock": 20,     # CohortServer single-writer select
+        "_select_lock": 20,     # CohortServer single-writer select/draw
+        "_solve_lock": 24,      # engine entry: inline + background solves
         "lock": 30,             # _Tenant batch bookkeeping (via seal)
+        "_write_lock": 32,      # embedding base table + delta buffer
+        "_queue_lock": 34,      # BackgroundSolver dirty-tenant queue
+        "_dedupe_lock": 35,     # SolveDeduper fingerprint registry
+        "_publish_lock": 36,    # warmed (version, table, result) mailbox
+        "_admission_lock": 38,  # AdmissionController tokens / depth
         "_stats_lock": 40,      # CohortServer counters (innermost)
     }
 
+``_write_lock`` ranks *after* the select/tenant locks because
+``snapshot()`` now materializes the pending-delta buffer under it, and
+the select path snapshots while holding ``_select_lock`` (and the seal
+callback may have taken the tenant ``lock`` just before).  The
+streaming locks slot between it and ``_stats_lock``: a background
+solver worker takes ``_queue_lock`` alone, then ``_dedupe_lock`` alone,
+then ``_solve_lock`` alone, then ``_publish_lock`` — never while
+holding ``_select_lock`` — so the serving path can never deadlock
+against a background publish.
+
 ``instrument(obj, ranks)`` swaps an object's lock attributes for
-watchdogged wrappers in place — used by ``tests/test_frontend.py`` to
-run the coalescing herd with order assertions on.
+watchdogged wrappers in place — used by ``tests/test_frontend.py`` and
+``tests/test_streaming.py`` to run the coalescing/streaming herds with
+order assertions on.
 """
 
 from __future__ import annotations
@@ -38,9 +54,14 @@ from typing import Dict, List, Optional
 #: docs/ANALYSIS.md ("Lock discipline") for the derivation.
 SERVING_LOCK_ORDER: Dict[str, int] = {
     "_registry_lock": 5,
-    "_write_lock": 10,
     "_select_lock": 20,
+    "_solve_lock": 24,
     "lock": 30,
+    "_write_lock": 32,
+    "_queue_lock": 34,
+    "_dedupe_lock": 35,
+    "_publish_lock": 36,
+    "_admission_lock": 38,
     "_stats_lock": 40,
 }
 

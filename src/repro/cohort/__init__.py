@@ -9,7 +9,7 @@ engine") for the architecture sketch.
 """
 
 from repro.cohort.engine import (CohortConfig, CohortEngine, CohortResult,
-                                 CohortState)
+                                 CohortState, PreparedSolve)
 from repro.cohort.eigensolver import subspace_topk, topk_eigh
 from repro.cohort.landmarks import (LANDMARK_STRATEGIES, select_landmarks,
                                     uniform_landmarks, kmeanspp_landmarks,
@@ -19,6 +19,7 @@ from repro.cohort.sharded import sharded_nystrom_from_landmarks
 
 __all__ = [
     "CohortConfig", "CohortEngine", "CohortResult", "CohortState",
+    "PreparedSolve",
     "subspace_topk", "topk_eigh",
     "LANDMARK_STRATEGIES", "select_landmarks", "uniform_landmarks",
     "kmeanspp_landmarks", "leverage_landmarks",

@@ -163,6 +163,34 @@ class CohortResult:
     seconds: float                # wall time of this solve (0 on cache hit)
 
 
+@dataclasses.dataclass
+class PreparedSolve:
+    """A finished solve staged for publication (the solve-ahead payload).
+
+    :meth:`CohortEngine.prepare` computes one of these **without**
+    touching any serving-visible engine state — no fingerprint-cache
+    entry, no warm-start baseline, no counters.  A later
+    :meth:`CohortEngine.publish` installs it atomically (from the
+    caller's locking point of view: publish is a handful of reference
+    assignments).  This is what lets a background solver warm version
+    v+1 while the serving path keeps replaying version v's result from
+    the cache, then swap.
+    """
+    fingerprint: bytes
+    sketch: np.ndarray
+    num_clients: int
+    result: CohortResult
+    landmark_idx: Optional[np.ndarray]
+    gamma: Optional[float]
+    w_basis: Optional[np.ndarray]
+    mm_basis: Optional[np.ndarray]
+    warm: bool                    # warm-started off the state it saw
+    drift: float
+    # k+1-wide L_norm spectrum for the landmark autotuner (only set for
+    # cold landmark solves under num_landmarks="auto")
+    auto_m_evals: Optional[np.ndarray] = None
+
+
 class CohortEngine:
     """Owns the full select–cluster–cache lifecycle for cohort selection.
 
@@ -200,10 +228,18 @@ class CohortEngine:
         self.state = CohortState()
 
     @staticmethod
-    def _fingerprint(embeds: np.ndarray) -> bytes:
+    def fingerprint(embeds: np.ndarray) -> bytes:
+        """Content fingerprint of an embedding table (shape-qualified).
+
+        Public because the streaming layer keys cross-tenant solve
+        dedupe on it: two tenants whose tables hash identically can ride
+        one background solve (``repro.streaming.SolveDeduper``).
+        """
         h = hashlib.sha1(np.ascontiguousarray(embeds).tobytes())
         h.update(str(embeds.shape).encode())
         return h.digest()
+
+    _fingerprint = fingerprint                   # pre-streaming spelling
 
     def _sketch(self, embeds: np.ndarray) -> np.ndarray:
         """O(n·d) drift probe: column moments + a sign-weighted row sum.
@@ -260,9 +296,8 @@ class CohortEngine:
         count under ``stats["probes"]``.
         """
         embeds = np.ascontiguousarray(np.asarray(embeds, np.float32))
-        cfg = self.config
         st = self.state
-        fp = self._fingerprint(embeds)
+        fp = self.fingerprint(embeds)
         persist = key is None
         if persist and st.fingerprint == fp and st.result is not None:
             self.stats["cache_hits"] += 1
@@ -274,7 +309,64 @@ class CohortEngine:
                 assign=cached.assign.copy(),
                 embedding=cached.embedding.copy(),
                 evals=cached.evals.copy())
+        prep = self._prepare(embeds, fp, key=key, warm_ok=persist)
+        if persist:
+            self.publish(prep)
+        else:
+            self.stats["probes"] += 1
+        return prep.result
 
+    # -- solve-ahead (the streaming double-buffer entry points) ----------
+    def prepare(self, embeds) -> Optional[PreparedSolve]:
+        """Solve without mutating serving-visible caches.
+
+        Returns the staged :class:`PreparedSolve` for a later
+        :meth:`publish`, or ``None`` when the engine's cache is already
+        current for these exact embeddings (nothing to warm).  Warm-start
+        eligibility is read from the state the engine holds *now* — the
+        canonical caller (``repro.streaming.BackgroundSolver``) serializes
+        all engine entries on the server's ``_solve_lock``, so the state
+        it sees is the last published solve.
+        """
+        embeds = np.ascontiguousarray(np.asarray(embeds, np.float32))
+        fp = self.fingerprint(embeds)
+        if self.state.fingerprint == fp and self.state.result is not None:
+            return None
+        return self._prepare(embeds, fp, key=None, warm_ok=True)
+
+    def publish(self, prep: PreparedSolve, *, count: bool = True,
+                ) -> CohortResult:
+        """Install a staged solve as the engine's current state.
+
+        This is the only place a :meth:`prepare` output becomes visible
+        to the fingerprint cache and the warm-start baseline.  ``count=
+        False`` installs without bumping the solve counters — used when a
+        deduped solve computed by another tenant's engine is adopted, so
+        "exactly one engine solve" stays true on dashboards.
+        """
+        st = self.state
+        st.fingerprint, st.num_clients = prep.fingerprint, prep.num_clients
+        if not prep.warm:
+            st.sketch = prep.sketch          # new cold baseline
+        st.landmark_idx = prep.landmark_idx
+        st.gamma = prep.gamma
+        st.w_basis = prep.w_basis
+        st.mm_basis = prep.mm_basis
+        st.result = prep.result
+        if count:
+            self.stats["warm_starts" if prep.warm else "cold_starts"] += 1
+            self.stats["solves"] += 1
+            if prep.auto_m_evals is not None:
+                self._update_auto_m(prep.num_clients,
+                                    self.config.num_clusters,
+                                    prep.drift, prep.auto_m_evals)
+        return prep.result
+
+    def _prepare(self, embeds: np.ndarray, fp: bytes, *, key,
+                 warm_ok: bool) -> PreparedSolve:
+        """The full solve, staged: reads engine state, never writes it."""
+        cfg = self.config
+        st = self.state
         t0 = time.perf_counter()
         n = embeds.shape[0]
         method = self._resolve_method(n)
@@ -304,17 +396,15 @@ class CohortEngine:
         solve_k = k + 1 if widen else k
         if method == "dense":
             y, evals = self._solve_dense(x, solve_k)
-            source = "cold"
-            if persist:
-                st.landmark_idx = st.w_basis = st.mm_basis = None
-                st.gamma = None
-                self.stats["cold_starts"] += 1
+            warm = False
+            idx = gamma = w_basis = mm_basis = None
         else:
-            y, evals, source = self._solve_landmarks(
-                x, solve_k, method, drift, land_key, solve_key,
-                persist=persist)
-            if self._autotune_m and persist and source == "cold":
-                self._update_auto_m(n, k, drift, np.asarray(evals))
+            y, evals, warm, idx, gamma, w_basis, mm_basis = \
+                self._solve_landmarks(x, solve_k, method, drift,
+                                      land_key, solve_key, warm_ok=warm_ok)
+        auto_m_evals = (np.asarray(evals)
+                        if self._autotune_m and method != "dense"
+                        and not warm else None)
 
         k_hat = k
         if cfg.auto_k:
@@ -328,17 +418,15 @@ class CohortEngine:
         result = CohortResult(
             assign=np.asarray(assign), k=k_hat,
             embedding=np.asarray(y), evals=np.asarray(evals),
-            method=method, source=source, drift=drift,
+            method=method, source="warm" if warm else "cold", drift=drift,
             seconds=time.perf_counter() - t0)
-        if persist:
-            st.fingerprint, st.num_clients = fp, n
-            if source != "warm":
-                st.sketch = sketch          # new cold baseline
-            st.result = result
-            self.stats["solves"] += 1
-        else:
-            self.stats["probes"] += 1
-        return result
+        return PreparedSolve(
+            fingerprint=fp, sketch=sketch, num_clients=n, result=result,
+            landmark_idx=None if idx is None else np.asarray(idx),
+            gamma=None if gamma is None else float(gamma),
+            w_basis=None if w_basis is None else np.asarray(w_basis),
+            mm_basis=None if mm_basis is None else np.asarray(mm_basis),
+            warm=warm, drift=drift, auto_m_evals=auto_m_evals)
 
     def select_batched(self, embeds, *, requests: int = 1) -> CohortResult:
         """One solve serving ``requests`` coalesced select calls.
@@ -420,7 +508,7 @@ class CohortEngine:
         self.stats["auto_m"] = m
 
     def _solve_landmarks(self, x, k: int, method: str, drift: float,
-                         land_key, solve_key, *, persist: bool = True):
+                         land_key, solve_key, *, warm_ok: bool = True):
         cfg, st = self.config, self.state
         n = x.shape[0]
         m = self._num_landmarks(n, k)
@@ -428,9 +516,11 @@ class CohortEngine:
         # warm = reuse the previous round's landmarks + bandwidth; with
         # subspace solvers the persisted eigenbases additionally seed q0
         # and the iteration count drops to warm_iters.  Keyed probes
-        # (persist=False) never warm-start: the caller's key must fully
-        # determine the solve, not the persisted landmark state.
-        warm = (persist and cfg.warm_start
+        # (warm_ok=False) never warm-start: the caller's key must fully
+        # determine the solve, not the persisted landmark state.  Reads
+        # the persisted state, never writes it — publication of the
+        # landmark set is CohortEngine.publish's job.
+        warm = (warm_ok and cfg.warm_start
                 and drift <= cfg.drift_threshold
                 and st.landmark_idx is not None
                 and len(st.landmark_idx) == m and st.gamma is not None)
@@ -461,10 +551,4 @@ class CohortEngine:
         else:
             y, evals, mm_basis, w_basis = nystrom_from_landmarks(
                 x, idx, k, gamma, use_pallas=cfg.use_pallas, **kwargs)
-        if persist:
-            st.landmark_idx = np.asarray(idx)
-            st.gamma = float(gamma)
-            st.w_basis = np.asarray(w_basis)
-            st.mm_basis = np.asarray(mm_basis)
-            self.stats["warm_starts" if warm else "cold_starts"] += 1
-        return y, evals, ("warm" if warm else "cold")
+        return y, evals, warm, idx, gamma, w_basis, mm_basis

@@ -29,8 +29,20 @@ shaped like the shared selector service of the FL-systems literature
 Synchronous callers lose nothing: with no concurrency a batch is just
 one request and the path degenerates to ``select_cohort``.
 
+* **Streaming** (``streaming=StreamingSpec(...)``) — the frontend owns
+  one shared :class:`repro.streaming.BackgroundSolver` and
+  :class:`repro.streaming.SolveDeduper` and wires every streaming
+  tenant's server to them: embedding updates warm the next table
+  version off the select path, identical-fingerprint tenants ride one
+  solve, and per-tenant admission control (bounded in-flight depth +
+  token-bucket rate) sheds overload with typed
+  :class:`repro.streaming.ShedError`\\ s before it reaches the engine.
+  ``close()`` (or the context manager) drains in-flight batches, joins
+  the solver, and turns new selects into
+  :class:`repro.streaming.ServiceClosedError`.
+
   PYTHONPATH=src python -m repro.launch.serve --cohort 20000 \
-      --tenants 4 --cohort-size 64 --policy dqn --rounds 5
+      --tenants 4 --cohort-size 64 --policy dqn --rounds 5 --streaming
 """
 
 from __future__ import annotations
@@ -69,14 +81,19 @@ class TenantSpec:
     target_accuracy: float = 0.85
     dqn_overrides: Optional[dict] = None
     state_features: str = "rich"
+    # repro.streaming.StreamingSpec; None inherits the frontend default
+    streaming: Optional[object] = None
 
-    def build(self) -> CohortServer:
+    def build(self, *, streaming=None, solver=None,
+              deduper=None) -> CohortServer:
         return CohortServer(
             self.num_clients, self.embed_dim, config=self.config,
             seed=self.seed, policy=self.policy,
             target_accuracy=self.target_accuracy,
             dqn_overrides=self.dqn_overrides,
-            state_features=self.state_features)
+            state_features=self.state_features,
+            streaming=self.streaming or streaming,
+            solver=solver, deduper=deduper)
 
 
 class _Batch:
@@ -107,6 +124,9 @@ class _Tenant:
         self.lock = threading.Lock()
         self.open_batch: Optional[_Batch] = None    # guarded-by: lock
         self.max_batch = 0                          # guarded-by: lock
+        # selects currently inside select_cohort (leader or joiner);
+        # close() drains on this
+        self.inflight = 0                           # guarded-by: lock
 
 
 class CohortFrontend:
@@ -122,28 +142,59 @@ class CohortFrontend:
             solve holds the select lock coalesce into the next batch);
             positive values also coalesce bursts with no lock
             contention, at that much added latency per batch.
+        streaming: default :class:`repro.streaming.StreamingSpec` for
+            tenants built from :class:`TenantSpec`\\ s (a spec's own
+            ``streaming`` field wins).  Streaming tenants share one
+            frontend-owned background solver and solve deduper.
     """
 
     def __init__(self, tenants: Union[Mapping[str, CohortServer],
                                       Iterable[TenantSpec], None] = None,
-                 *, batch_window_s: float = DEFAULT_BATCH_WINDOW_S):
+                 *, batch_window_s: float = DEFAULT_BATCH_WINDOW_S,
+                 streaming=None):
         self.batch_window_s = float(batch_window_s)
+        self.streaming = streaming
         self._registry_lock = threading.Lock()
         self._tenants: Dict[str, _Tenant] = {}  # guarded-by: _registry_lock
+        # shared across streaming tenants, created on first need
+        self._solver = None                     # guarded-by: _registry_lock
+        self._deduper = None                    # guarded-by: _registry_lock
+        self._closed = False                    # guarded-by: _registry_lock
         if tenants is not None:
             if isinstance(tenants, Mapping):
                 for name, server in tenants.items():
                     self.add_tenant(name, server)
             else:
                 for spec in tenants:
-                    self.add_tenant(spec.name, spec.build())
+                    self.add_tenant(spec.name, spec)
 
     # -- tenant registry --------------------------------------------------
+    def _shared_streaming(self, spec):
+        """The frontend-wide (solver, deduper) pair, created lazily."""
+        from repro.streaming import BackgroundSolver, SolveDeduper
+        with self._registry_lock:
+            if self._solver is None:
+                self._solver = BackgroundSolver(spec.solver_workers)
+            if self._deduper is None and spec.dedupe:
+                self._deduper = SolveDeduper()
+            return self._solver, self._deduper if spec.dedupe else None
+
     def add_tenant(self, name: str,
                    server: Union[CohortServer, TenantSpec]) -> CohortServer:
-        """Register a shard; returns its :class:`CohortServer`."""
+        """Register a shard; returns its :class:`CohortServer`.
+
+        A :class:`TenantSpec` builds its server here — with the
+        frontend's shared background solver and deduper when the spec
+        (or the frontend default) enables streaming.  A pre-built
+        :class:`CohortServer` is registered as-is.
+        """
         if isinstance(server, TenantSpec):
-            server = server.build()
+            spec = server.streaming or self.streaming
+            solver = deduper = None
+            if spec is not None:
+                solver, deduper = self._shared_streaming(spec)
+            server = server.build(streaming=spec, solver=solver,
+                                  deduper=deduper)
         with self._registry_lock:
             if name in self._tenants:
                 raise ValueError(f"tenant {name!r} already registered")
@@ -188,26 +239,47 @@ class CohortFrontend:
         ``CohortServer.select_cohorts`` and every waiter receives its
         own slice of the shared solve — cohorts within a batch are
         disjoint because they pop the same cluster pools.
+
+        A streaming tenant's admission control runs first: past the
+        configured in-flight depth or token-bucket rate the request is
+        shed with a typed :class:`repro.streaming.ShedError` before any
+        batching or engine work.  After :meth:`close`, selects raise
+        :class:`repro.streaming.ServiceClosedError` instead.
         """
+        if self._closed:
+            from repro.streaming import ServiceClosedError
+            raise ServiceClosedError("CohortFrontend is closed")
         t = self._get(tenant)
-        with t.lock:
-            version = t.server.version
-            batch = t.open_batch
-            if (batch is not None and not batch.closed
-                    and batch.version == version):
-                index = len(batch.sizes)
-                batch.sizes.append(int(cohort_size))
-                leader = False
-            else:
-                batch = _Batch(version)
-                index = 0
-                batch.sizes.append(int(cohort_size))
-                t.open_batch = batch
-                leader = True
-        if leader:
-            self._run_batch(t, batch)
-        else:
-            batch.done.wait()
+        adm = t.server.admission
+        if adm is not None:
+            adm.try_admit()                # raises ShedError on overload
+        try:
+            with t.lock:
+                t.inflight += 1
+                version = t.server.version
+                batch = t.open_batch
+                if (batch is not None and not batch.closed
+                        and batch.version == version):
+                    index = len(batch.sizes)
+                    batch.sizes.append(int(cohort_size))
+                    leader = False
+                else:
+                    batch = _Batch(version)
+                    index = 0
+                    batch.sizes.append(int(cohort_size))
+                    t.open_batch = batch
+                    leader = True
+            try:
+                if leader:
+                    self._run_batch(t, batch)
+                else:
+                    batch.done.wait()
+            finally:
+                with t.lock:
+                    t.inflight -= 1
+        finally:
+            if adm is not None:
+                adm.release()
         if batch.error is not None:
             raise RuntimeError(
                 f"coalesced select failed for tenant {t.name!r}"
@@ -249,6 +321,43 @@ class CohortFrontend:
                     t.open_batch = None
             batch.done.set()
 
+    # -- shutdown ---------------------------------------------------------
+    def close(self, timeout: float = 30.0) -> None:
+        """Graceful shutdown: reject, drain, join.  Idempotent.
+
+        New ``select_cohort`` calls raise
+        :class:`repro.streaming.ServiceClosedError` immediately;
+        in-flight coalesced batches are drained (bounded by
+        ``timeout`` seconds overall), the shared background solver is
+        drained and joined, and every tenant server is closed.
+        """
+        with self._registry_lock:
+            if self._closed:
+                return
+            self._closed = True
+            tenants = dict(self._tenants)
+            solver = self._solver
+        deadline = time.monotonic() + timeout
+        for t in tenants.values():
+            while True:
+                with t.lock:
+                    idle = t.inflight == 0 and t.open_batch is None
+                if idle or time.monotonic() >= deadline:
+                    break
+                time.sleep(0.002)
+        # tenant servers share the frontend's solver, so closing them
+        # only flips their reject flag; the solver joins once, here
+        for t in tenants.values():
+            t.server.close()
+        if solver is not None:
+            solver.close(timeout=max(0.0, deadline - time.monotonic()))
+
+    def __enter__(self) -> "CohortFrontend":
+        return self
+
+    def __exit__(self, exc_type, exc, tb) -> None:
+        self.close()
+
     # -- observability ----------------------------------------------------
     def stats(self) -> dict:
         """Aggregate + per-tenant serving stats.
@@ -259,14 +368,17 @@ class CohortFrontend:
         shards — request/batch/solve totals come straight from the
         servers' own counters (single source of truth), and
         ``batch_factor = requests / batches`` is the mean realized
-        coalescing per engine entry.
+        coalescing per engine entry.  The streaming counters aggregate
+        too: ``warm_ahead`` / ``served_warm`` / ``forced_inline`` /
+        ``dedupe_hit`` / ``shed`` summed across shards.
         """
         with self._registry_lock:
             tenants = dict(self._tenants)
         per_tenant = {}
         agg = {"num_tenants": len(tenants), "requests": 0, "solves": 0,
                "cache_hits": 0, "batches": 0, "max_batch": 0,
-               "rounds_observed": 0}
+               "rounds_observed": 0, "warm_ahead": 0, "served_warm": 0,
+               "forced_inline": 0, "dedupe_hit": 0, "shed": 0}
         for name, t in tenants.items():
             st = t.server.stats()
             with t.lock:
@@ -278,6 +390,9 @@ class CohortFrontend:
             agg["solves"] += st["engine"]["solves"]
             agg["cache_hits"] += st["engine"]["cache_hits"]
             agg["max_batch"] = max(agg["max_batch"], st["max_batch"])
+            for key in ("warm_ahead", "served_warm", "forced_inline",
+                        "dedupe_hit", "shed"):
+                agg[key] += st[key]
         agg["batch_factor"] = agg["requests"] / max(agg["batches"], 1)
         return {"frontend": agg, "tenants": per_tenant}
 
@@ -286,17 +401,19 @@ def make_demo_frontend(num_tenants: int, num_clients: int, embed_dim: int,
                        *, config=None, seed: int = 0,
                        policy: str = "stratified",
                        batch_window_s: float = DEFAULT_BATCH_WINDOW_S,
-                       ) -> CohortFrontend:
+                       streaming=None) -> CohortFrontend:
     """Frontend with ``num_tenants`` synthetic model-family shards.
 
     Tenant ``family-i`` gets an independent seed (``seed + i``) so the
     shards' engines, draw rngs, and Q-networks are decorrelated — the
-    isolation the tenant tests pin down.
+    isolation the tenant tests pin down.  ``streaming`` (a
+    :class:`repro.streaming.StreamingSpec`) applies to every shard.
     """
     specs = [TenantSpec(f"family-{i}", num_clients, embed_dim,
                         config=config, seed=seed + i, policy=policy)
              for i in range(num_tenants)]
-    return CohortFrontend(specs, batch_window_s=batch_window_s)
+    return CohortFrontend(specs, batch_window_s=batch_window_s,
+                          streaming=streaming)
 
 
 def run_demo(args) -> None:
@@ -319,9 +436,14 @@ def run_demo(args) -> None:
     cfg = CohortConfig(num_clusters=args.num_clusters,
                        landmarks=args.landmarks,
                        num_landmarks=num_landmarks)
+    streaming = None
+    if getattr(args, "streaming", False):
+        from repro.streaming import StreamingSpec
+        streaming = StreamingSpec(max_stale_versions=args.max_stale)
     fe = make_demo_frontend(args.tenants, args.cohort, d, config=cfg,
                             seed=args.seed, policy=args.policy,
-                            batch_window_s=args.batch_window)
+                            batch_window_s=args.batch_window,
+                            streaming=streaming)
     for name in fe.tenant_names:
         centers = rng.normal(size=(args.num_clusters, d)) * 6
         labels = rng.integers(0, args.num_clusters, args.cohort)
@@ -350,5 +472,6 @@ def run_demo(args) -> None:
               f"{args.tenants} tenants in {dt:.3f}s "
               f"({workers / max(dt, 1e-9):,.1f} selects/s, "
               f"batch factor {agg['batch_factor']:.2f})")
+    fe.close()
     print("frontend stats:", json.dumps(fe.stats()["frontend"], indent=2,
                                         default=float))

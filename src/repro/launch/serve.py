@@ -164,16 +164,31 @@ class CohortServer:
       updates the replay buffer, and takes one TD training step — the
       policy learns online which clusters to favor while serving.
 
-    Concurrency: the embedding table is **versioned copy-on-write** —
-    ``update_embeddings`` builds a fresh table and swaps the reference
-    under a writer lock, while ``select_cohort`` snapshots the current
-    reference, so a selection in flight always clusters one internally
-    consistent table (never a half-updated one).  Selections themselves
-    are serialized on a second lock because the engine's warm-start
-    state is single-writer.  Embedding updates only invalidate the
-    engine's exact-match cache; small drift keeps the warm-start path,
-    so steady-state request latency excludes landmark reselection and
-    cold eigensolves.
+    Concurrency: the embedding table is **versioned copy-on-write with a
+    coalesced delta buffer** — ``update_embeddings`` appends the changed
+    rows (O(delta), no full-table copy) and bumps the version;
+    ``snapshot`` materializes a fresh immutable table only when deltas
+    are actually pending, so a million-client table is not re-shipped
+    per round and a selection in flight always clusters one internally
+    consistent table.  Selections are serialized on ``_select_lock``;
+    engine entries (inline or background) are serialized on
+    ``_solve_lock`` because the engine's warm-start state is
+    single-writer.  Embedding updates only invalidate the engine's
+    exact-match cache; small drift keeps the warm-start path, so
+    steady-state request latency excludes landmark reselection and cold
+    eigensolves.
+
+    Streaming (``streaming=StreamingSpec(...)``): re-clustering moves
+    off the select path entirely — every ``update_embeddings`` marks the
+    table dirty on a :class:`repro.streaming.BackgroundSolver`, whose
+    worker snapshots the freshest table, runs ``engine.prepare`` +
+    ``publish`` under ``_solve_lock``, and parks the finished
+    ``(version, table, result)`` in the ``_published`` mailbox.  The
+    next select swaps the mailbox into ``_served`` and draws from it —
+    no solve inline — unless the served version has fallen more than
+    ``max_stale_versions`` behind the table, which forces one inline
+    solve (bounded staleness).  See docs/ARCHITECTURE.md ("Streaming
+    re-clustering").
 
     Args:
         num_clients:  N, rows of the embedding table.
@@ -188,6 +203,16 @@ class CohortServer:
             staleness) or ``"basic"`` (the legacy ``3k + 1``
             participation-only state; keeps replay buffers recorded
             against the narrow shape loadable).
+        streaming:    :class:`repro.streaming.StreamingSpec` enabling
+            double-buffered background re-clustering (+ admission knobs
+            for the singular ``select_cohort`` path); None = solve
+            inline as before.
+        solver:       share a :class:`repro.streaming.BackgroundSolver`
+            across servers (the frontend does); None with ``streaming``
+            set creates (and owns) a private one.
+        deduper:      share a :class:`repro.streaming.SolveDeduper` so
+            identical-fingerprint tenants ride one solve; None disables
+            dedupe for this server.
     """
 
     POLICIES = ("stratified", "dqn")
@@ -196,7 +221,8 @@ class CohortServer:
                  config=None, seed: int = 0, policy: str = "stratified",
                  target_accuracy: float = 0.85,
                  dqn_overrides: Optional[dict] = None,
-                 state_features: str = "rich"):
+                 state_features: str = "rich",
+                 streaming=None, solver=None, deduper=None):
         from repro.cohort import CohortConfig, CohortEngine
         from repro.fed.metrics import serving_state_dim
 
@@ -226,6 +252,13 @@ class CohortServer:
         table.setflags(write=False)       # snapshots must stay immutable
         self._write_lock = threading.Lock()
         self._select_lock = threading.Lock()
+        # serializes engine entries: the inline select path and the
+        # background solver's prepare/publish both mutate the engine's
+        # warm-start state (ranked between _select_lock and _write_lock
+        # in SERVING_LOCK_ORDER)
+        self._solve_lock = threading.Lock()
+        # mailbox the background solver fills and the select path drains
+        self._publish_lock = threading.Lock()
         # leaf lock for dashboard state (innermost — see
         # repro.analysis.watchdog.SERVING_LOCK_ORDER): counters and
         # latency EMAs are mutated from BOTH the update path
@@ -233,8 +266,36 @@ class CohortServer:
         # and read by stats(), so they need a lock of their own rather
         # than whichever path's lock happened to be held.
         self._stats_lock = threading.Lock()
-        # (version, table), swapped whole
-        self._snap = (0, table)           # guarded-by: _write_lock
+        # versioned copy-on-write base + coalesced pending deltas:
+        # update_embeddings appends O(delta) rows here and snapshot()
+        # materializes base+deltas into a fresh immutable table lazily
+        self._version = 0                 # guarded-by: _write_lock
+        self._base = table                # guarded-by: _write_lock
+        self._delta_ids: List[np.ndarray] = []    # guarded-by: _write_lock
+        self._delta_rows: List[np.ndarray] = []   # guarded-by: _write_lock
+        self._delta_pending = 0           # guarded-by: _write_lock
+        self._materializations = 0        # guarded-by: _write_lock
+
+        # streaming double-buffer: _published is the background solver's
+        # finished (version, table, result); _served is the pair selects
+        # currently draw from
+        self._streaming = streaming
+        self._published = None            # guarded-by: _publish_lock
+        self._served = None               # guarded-by: _select_lock
+        self._closed = False              # guarded-by: _select_lock
+        self._deduper = deduper
+        self._own_solver = streaming is not None and solver is None
+        if self._own_solver:
+            from repro.streaming import BackgroundSolver
+            solver = BackgroundSolver(streaming.solver_workers)
+        self._solver = solver if streaming is not None else None
+        self.admission = None
+        if streaming is not None and (streaming.max_queue_depth is not None
+                                      or streaming.rate_per_s is not None):
+            from repro.streaming import AdmissionController
+            self.admission = AdmissionController(
+                max_queue_depth=streaming.max_queue_depth,
+                rate_per_s=streaming.rate_per_s, burst=streaming.burst)
 
         self._participation = np.zeros(k, np.float64)   # guarded-by: _select_lock
         self._reward_ema = np.zeros(k, np.float32)      # guarded-by: _select_lock
@@ -250,43 +311,148 @@ class CohortServer:
         self._round_timings: dict = {}                  # guarded-by: _stats_lock
         self._counters = {  # guarded-by: _stats_lock
             "requests": 0, "batches": 0, "updates": 0,
-            "rounds_observed": 0, "dropped_transitions": 0}
+            "rounds_observed": 0, "dropped_transitions": 0,
+            # streaming: background warms landed / selects answered from
+            # a warmed result / selects that had to solve inline / warms
+            # adopted from another tenant's identical-fingerprint solve
+            "warm_ahead": 0, "served_warm": 0, "forced_inline": 0,
+            "dedupe_hit": 0}
         self.last_select_s = 0.0                        # guarded-by: _select_lock
 
-    # -- embedding table (versioned copy-on-write) -----------------------
+    # -- embedding table (versioned copy-on-write + delta buffer) --------
     @property
     def embeds(self) -> np.ndarray:
         """Current (read-only) embedding-table snapshot."""
-        return self._snap[1]
+        return self.snapshot()[1]
 
     @property
     def version(self) -> int:
         """Table version; bumps on every ``update_embeddings``."""
-        return self._snap[0]
+        return self._version
 
     def snapshot(self):
-        """Atomically read ``(version, table)``; the table is immutable."""
-        # the (version, table) pair is swapped as one tuple, so a single
-        # reference read can never pair a stale version with a new table
-        return self._snap
+        """Read a consistent ``(version, table)``; the table is immutable.
+
+        Materializes pending deltas into a fresh copy-on-write table
+        only when there are any — repeated snapshots between updates
+        return the same frozen array, and readers holding an older
+        snapshot are never affected.
+        """
+        return self._flush()
+
+    def _flush(self):
+        """Apply pending deltas to the base table (self-locking)."""
+        with self._write_lock:
+            if self._delta_pending:
+                table = self._base.copy()
+                for ids, rows in zip(self._delta_ids, self._delta_rows):
+                    table[ids] = rows
+                table.setflags(write=False)
+                self._base = table
+                self._delta_ids = []
+                self._delta_rows = []
+                self._delta_pending = 0
+                self._materializations += 1
+            return self._version, self._base
 
     def update_embeddings(self, client_ids, new_embeds) -> None:
         """Replace the embedding rows of ``client_ids``.
 
-        Copy-on-write: readers holding the previous snapshot are
-        unaffected; the new (version, table) pair becomes visible
-        atomically.
+        O(delta): the rows are appended to a pending-delta buffer and
+        the version bumps; the O(N·d) materialization happens at the
+        next :meth:`snapshot` (deltas applied in arrival order, so
+        later writes to the same client win).  Readers holding a
+        previous snapshot are unaffected.  When ``streaming`` is
+        enabled the update also marks this server dirty on the
+        background solver, so a fresh solve starts warming immediately.
         """
-        ids = np.asarray(client_ids)
-        rows = np.asarray(new_embeds, np.float32)
+        ids = np.array(client_ids, dtype=np.int64)   # copy: deferred apply
+        rows = np.array(new_embeds, dtype=np.float32)
+        n, d = self._base.shape
+        if rows.ndim != 2 or rows.shape != (len(ids), d):
+            raise ValueError(f"rows shape {rows.shape} != ({len(ids)}, {d})")
+        if len(ids) and (ids.min() < -n or ids.max() >= n):
+            raise IndexError(f"client_ids out of range for {n} clients")
+        flush_now = False
         with self._write_lock:
-            version, table = self._snap
-            table = table.copy()
-            table[ids] = rows
-            table.setflags(write=False)
-            self._snap = (version + 1, table)
+            self._delta_ids.append(ids)
+            self._delta_rows.append(rows)
+            self._delta_pending += len(ids)
+            self._version += 1
+            # bound the buffer: once pending rows rival the table size a
+            # materialization is no longer a saving, only deferred work
+            flush_now = self._delta_pending >= n
+        if flush_now:
+            self._flush()
         with self._stats_lock:
             self._counters["updates"] += 1
+        if self._solver is not None:
+            self._solver.submit(id(self), self._background_warm)
+
+    # -- streaming (background warm + shutdown) ---------------------------
+    def _background_warm(self) -> None:
+        """Solve-ahead task run on a :class:`BackgroundSolver` worker.
+
+        Snapshots the freshest table, computes (or, with dedupe, adopts)
+        a :class:`repro.cohort.PreparedSolve` for it, publishes it into
+        the engine under ``_solve_lock``, and parks the finished
+        ``(version, table, result)`` in the ``_published`` mailbox for
+        the next select to swap in.  Never takes ``_select_lock`` — the
+        serving path is never blocked behind a background solve.
+        """
+        version, table = self.snapshot()
+        with self._publish_lock:
+            pub = self._published
+        if pub is not None and pub[0] >= version:
+            return                      # already warmed this generation
+        ticket = prep = None
+        if self._deduper is not None:
+            from repro.cohort import CohortEngine
+            # key on (table content, engine config): identical tables
+            # under different cluster counts / methods must NOT share a
+            # solve — the adopted result's k would be wrong
+            ticket, prep = self._deduper.begin(
+                (CohortEngine.fingerprint(table), repr(self.config)))
+        if prep is not None:            # adopt another tenant's solve
+            with self._solve_lock:
+                res = self.engine.publish(prep, count=False)
+            with self._stats_lock:
+                self._counters["dedupe_hit"] += 1
+        else:
+            try:
+                with self._solve_lock:
+                    own = self.engine.prepare(table)
+                    res = (None if own is None
+                           else self.engine.publish(own))
+            except BaseException:
+                if ticket is not None:
+                    self._deduper.abort(ticket)
+                raise
+            if ticket is not None:
+                if own is not None:
+                    self._deduper.complete(ticket, own)
+                else:
+                    self._deduper.abort(ticket)
+            if res is None:
+                return                  # engine already current: no-op
+        with self._publish_lock:
+            if self._published is None or version > self._published[0]:
+                self._published = (version, table, res)
+        with self._stats_lock:
+            self._counters["warm_ahead"] += 1
+
+    def close(self, timeout: Optional[float] = None) -> None:
+        """Stop serving: reject new selects, stop an owned solver.
+
+        New ``select_cohort(s)`` calls raise
+        :class:`repro.streaming.ServiceClosedError`; a background solver
+        created by this server (not a shared one) is drained and joined.
+        Idempotent.
+        """
+        with self._select_lock:
+            self._closed = True
+        if self._own_solver and self._solver is not None:
+            self._solver.close(timeout)
 
     # -- serving ----------------------------------------------------------
     def _ema(self, name: str, value: float) -> None:
@@ -314,8 +480,16 @@ class CohortServer:
         ``client_ids`` has ``cohort_size`` entries unless the table has
         fewer clients.  With ``policy="dqn"`` the draw's (state,
         actions) pair is parked until :meth:`observe_round` reports the
-        round's accuracy.
+        round's accuracy.  When the streaming spec sets admission knobs
+        this path sheds with a typed
+        :class:`repro.streaming.ShedError` before touching the engine.
         """
+        if self.admission is not None:
+            self.admission.try_admit()
+            try:
+                return self.select_cohorts([cohort_size])[0]
+            finally:
+                self.admission.release()
         return self.select_cohorts([cohort_size])[0]
 
     def select_cohorts(self, cohort_sizes: Optional[List[int]] = None, *,
@@ -351,13 +525,42 @@ class CohortServer:
         if cohort_sizes is not None and not len(cohort_sizes):
             return []
         with self._select_lock:
+            if self._closed:
+                from repro.streaming import ServiceClosedError
+                raise ServiceClosedError("CohortServer is closed")
             sizes = [int(s) for s in (cohort_sizes if sizes_fn is None
                                       else sizes_fn())]
             if not sizes:
                 return []
             t0 = time.perf_counter()
-            _, table = self.snapshot()
-            res = self.engine.select_batched(table, requests=len(sizes))
+            version, table = self.snapshot()
+            res = None
+            if self._streaming is not None:
+                # drain the background solver's mailbox: swap in the
+                # warmed (version, table, result) if it is newer than
+                # what we're serving
+                with self._publish_lock:
+                    pub = self._published
+                if pub is not None and (self._served is None
+                                        or pub[0] > self._served[0]):
+                    self._served = pub
+                if self._served is not None:
+                    max_stale = self._streaming.max_stale_versions
+                    if (max_stale is None
+                            or version - self._served[0] <= max_stale):
+                        _, table, res = self._served
+                        with self._stats_lock:
+                            self._counters["served_warm"] += 1
+            if res is None:
+                # non-streaming, or nothing warmed yet / served version
+                # too stale: solve inline
+                with self._solve_lock:
+                    res = self.engine.select_batched(
+                        table, requests=len(sizes))
+                if self._streaming is not None:
+                    self._served = (version, table, res)
+                    with self._stats_lock:
+                        self._counters["forced_inline"] += 1
             t_solve = time.perf_counter()
             k = self.config.num_clusters
             pools = {c: list(np.flatnonzero(res.assign == c))
@@ -468,6 +671,14 @@ class CohortServer:
         ``last_select`` (method/source/drift/k of the latest solve), and
         ``policy`` (kind plus ε / state dim / steps / replay fill for
         "dqn").
+
+        Streaming adds the flat ``warm_ahead`` / ``served_warm`` /
+        ``forced_inline`` / ``dedupe_hit`` counters (always present,
+        zero when disabled), ``shed`` (selects rejected by admission
+        control), and a ``streaming`` sub-dict: enabled flag,
+        ``max_stale_versions``, the version currently served vs the
+        table version, delta-buffer ``materializations``, and the
+        admission/solver breakdowns.
         """
         last = self.engine.state.result
         policy = {"kind": self.policy_name}
@@ -479,12 +690,30 @@ class CohortServer:
             counters = dict(self._counters)
             latency = dict(self._latency)
             round_timings = dict(self._round_timings)
+        admission = (None if self.admission is None
+                     else self.admission.stats())
+        shed = (0 if admission is None
+                else admission["shed_queue"] + admission["shed_rate"])
+        spec = self._streaming
+        streaming = {
+            "enabled": spec is not None,
+            "max_stale_versions": (None if spec is None
+                                   else spec.max_stale_versions),
+            "served_version": (None if self._served is None
+                               else self._served[0]),
+            "materializations": self._materializations,
+            "admission": admission,
+        }
+        if self._own_solver and self._solver is not None:
+            streaming["solver"] = dict(self._solver.stats)
         return {
             **counters,
+            "shed": shed,
             "table_version": self.version,
-            "num_clients": self.embeds.shape[0],
+            "num_clients": self._base.shape[0],
             "state_features": self.state_features,
             "engine": dict(self.engine.stats),
+            "streaming": streaming,
             "latency_s": latency,
             "round_timings_s": round_timings,
             "last_select": None if last is None else {
@@ -505,6 +734,7 @@ def _cohort_main(args) -> None:
     from the engine cluster covering that group.
     """
     from repro.cohort import CohortConfig
+    from repro.streaming import StreamingSpec
 
     rng = np.random.default_rng(args.seed)
     d = 8
@@ -515,9 +745,11 @@ def _cohort_main(args) -> None:
     num_landmarks = args.num_landmarks
     if num_landmarks not in (None, "auto"):
         num_landmarks = int(num_landmarks)
+    streaming = (StreamingSpec(max_stale_versions=args.max_stale)
+                 if args.streaming else None)
     server = CohortServer(
         args.cohort, d, seed=args.seed, policy=args.policy,
-        target_accuracy=0.85,
+        target_accuracy=0.85, streaming=streaming,
         config=CohortConfig(num_clusters=args.num_clusters,
                             landmarks=args.landmarks,
                             num_landmarks=num_landmarks))
@@ -536,6 +768,7 @@ def _cohort_main(args) -> None:
               f"({res.method}/{res.source}) in {server.last_select_s:.3f}s "
               f"({args.cohort / max(server.last_select_s, 1e-9):,.0f} "
               f"clients/s, reward {reward:+.3f})")
+    server.close()
     import json
     print("server stats:", json.dumps(server.stats(), indent=2,
                                       default=float))
@@ -574,6 +807,14 @@ def main() -> None:
     ap.add_argument("--batch-window", type=float, default=0.0,
                     help="extra coalescing wait (s) in --tenants mode; "
                          "0 = natural batching only")
+    ap.add_argument("--streaming", action="store_true",
+                    help="double-buffered background re-clustering: "
+                         "serve version v while a BackgroundSolver "
+                         "warms v+1 (repro.streaming)")
+    ap.add_argument("--max-stale", type=int, default=None, metavar="V",
+                    help="with --streaming: force an inline solve when "
+                         "the served version falls more than V table "
+                         "versions behind (default: never)")
     args = ap.parse_args()
 
     if args.cohort:

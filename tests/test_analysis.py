@@ -233,10 +233,10 @@ def test_instrument_swaps_lock_attributes():
     assert isinstance(o._write_lock, OrderedLock)
     assert o._write_lock.rank == SERVING_LOCK_ORDER["_write_lock"]
     assert o.not_a_lock == 3
-    with o._write_lock:
-        with o._select_lock:            # declared order: write < select
+    with o._select_lock:
+        with o._write_lock:             # declared order: select < write
             pass
     with pytest.raises(LockOrderError):
-        with o._select_lock:
-            with o._write_lock:
+        with o._write_lock:
+            with o._select_lock:
                 pass

@@ -278,7 +278,8 @@ def test_watchdog_instrumented_stack_obeys_declared_lock_order():
         tenant = fe._tenants[name]
         assert instrument(tenant, prefix=f"{name}:") == ["lock"]
         assert sorted(instrument(tenant.server, prefix=f"{name}:")) == [
-            "_select_lock", "_stats_lock", "_write_lock"]
+            "_publish_lock", "_select_lock", "_solve_lock",
+            "_stats_lock", "_write_lock"]
 
     errors, done = [], []
     rng = np.random.default_rng(1)

@@ -1,0 +1,496 @@
+"""Streaming re-cluster subsystem: swap protocol, admission, dedupe.
+
+Pins down the tentpole invariants of ``repro.streaming`` +
+``CohortServer``'s double-buffer:
+
+* selects never observe a torn (version, table, result) triple while a
+  background solve is in flight — every engine entry sees one whole
+  table, and the served version never moves backwards;
+* after warm-up, selects are answered from the warmed result without an
+  inline solve (and ``max_stale_versions`` forces one deterministically
+  when the served version falls behind);
+* admission sheds deterministically at the configured queue depth and
+  token-bucket rate;
+* identical-fingerprint tenants ride exactly one engine solve;
+* ``CohortFrontend.close()`` drains, joins, and turns new selects into
+  a typed error;
+* delta-ingest buffers O(delta) updates and materializes once per
+  snapshot.
+"""
+
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.cohort import CohortConfig
+from repro.launch.frontend import CohortFrontend, TenantSpec
+from repro.launch.serve import CohortServer
+from repro.streaming import (AdmissionController, BackgroundSolver,
+                             QueueFullError, RateLimitError,
+                             ServiceClosedError, ShedError, SolveDeduper,
+                             StreamingSpec)
+
+CFG = CohortConfig(num_clusters=3)
+
+
+def wait_until(predicate, timeout=20.0, step=0.005):
+    deadline = time.monotonic() + timeout
+    while time.monotonic() < deadline:
+        if predicate():
+            return True
+        time.sleep(step)
+    return predicate()
+
+
+def mk_server(n=96, d=8, *, streaming=StreamingSpec(), solver=None,
+              deduper=None, seed=0, policy="stratified"):
+    srv = CohortServer(n, d, seed=seed, policy=policy, config=CFG,
+                       streaming=streaming, solver=solver, deduper=deduper)
+    rng = np.random.default_rng(seed)
+    srv.update_embeddings(np.arange(n),
+                          rng.normal(size=(n, d)).astype(np.float32))
+    return srv
+
+
+class DummySolver:
+    """submit() records but never runs — the mailbox stays empty."""
+
+    def __init__(self):
+        self.submitted = []
+        self.stats = {"submitted": 0, "runs": 0, "errors": 0,
+                      "coalesced": 0}
+
+    def submit(self, key, fn):
+        self.submitted.append((key, fn))
+        self.stats["submitted"] += 1
+        return True
+
+
+# -- delta-ingest (satellite) ---------------------------------------------
+
+def test_delta_ingest_coalesces_updates_and_materializes_on_snapshot():
+    n, d = 100, 4
+    srv = CohortServer(n, d, seed=0, config=CFG)
+    ref = np.zeros((n, d), np.float32)
+    rng = np.random.default_rng(0)
+    v0, before = srv.snapshot()
+    for i in range(5):
+        ids = rng.integers(0, n, 7)
+        rows = rng.normal(size=(7, d)).astype(np.float32)
+        srv.update_embeddings(ids, rows)
+        ref[ids] = rows                    # arrival order: later writes win
+    # five O(delta) updates, zero O(N*d) copies so far
+    assert srv.version == v0 + 5
+    assert srv._materializations == 0
+    version, table = srv.snapshot()
+    assert version == v0 + 5
+    assert srv._materializations == 1
+    np.testing.assert_array_equal(table, ref)
+    assert not table.flags.writeable
+    # copy-on-write: the pre-update snapshot is untouched
+    np.testing.assert_array_equal(before, np.zeros((n, d), np.float32))
+    # idle re-snapshot: same frozen array, no new materialization
+    assert srv.snapshot()[1] is table
+    assert srv._materializations == 1
+
+
+def test_delta_ingest_validates_ids_and_shapes_eagerly():
+    srv = CohortServer(10, 4, seed=0, config=CFG)
+    with pytest.raises(IndexError):
+        srv.update_embeddings([10], np.zeros((1, 4), np.float32))
+    with pytest.raises(ValueError):
+        srv.update_embeddings([0], np.zeros((1, 3), np.float32))
+    assert srv.version == 0                # failed updates don't bump
+
+
+def test_delta_ingest_flushes_inline_once_pending_rivals_table():
+    n = 16
+    srv = CohortServer(n, 4, seed=0, config=CFG)
+    rows = np.ones((n, 4), np.float32)
+    srv.update_embeddings(np.arange(n), rows)   # pending == n: flush now
+    assert srv._materializations == 1
+
+
+# -- double-buffer swap protocol (tentpole) --------------------------------
+
+def test_background_warm_lands_and_selects_stop_solving_inline():
+    srv = mk_server()
+    try:
+        assert wait_until(lambda: srv.stats()["warm_ahead"] >= 1)
+        inline0 = srv.stats()["forced_inline"]
+        for _ in range(5):
+            ids, res = srv.select_cohort(8)
+            assert len(ids) == 8
+        st = srv.stats()
+        assert st["forced_inline"] == inline0      # zero inline solves
+        assert st["served_warm"] == 5
+        assert st["streaming"]["served_version"] == srv.version
+    finally:
+        srv.close()
+
+
+def test_no_torn_tables_and_served_version_monotonic_under_churn():
+    """Churn + concurrent selects: every engine entry (inline select or
+    background prepare) must see one internally consistent table — all
+    rows from the same update generation — and the version a select is
+    served from must never move backwards.  This is the swap-protocol
+    torn-read test: a mailbox swap that published a result against a
+    different generation's table, or a half-applied delta flush, fails
+    it deterministically.
+    """
+    n, d = 64, 4
+    srv = CohortServer(n, d, seed=0, config=CFG, streaming=StreamingSpec())
+    violations, markers = [], {}
+    spy_lock = threading.Lock()
+
+    def checked(table):
+        flat = np.asarray(table)
+        if not np.all(flat == flat.flat[0]):
+            violations.append("torn table")
+        return float(flat.flat[0])
+
+    orig_prepare = srv.engine.prepare
+    orig_batched = srv.engine.select_batched
+
+    def spy_prepare(table):
+        marker = checked(table)
+        prep = orig_prepare(table)
+        if prep is not None:
+            with spy_lock:
+                # keep the result referenced so id() can never be reused
+                markers[id(prep.result)] = (prep.result, marker)
+        return prep
+
+    def spy_batched(table, requests=1):
+        marker = checked(table)
+        res = orig_batched(table, requests=requests)
+        with spy_lock:
+            markers[id(res)] = (res, marker)
+        return res
+
+    srv.engine.prepare = spy_prepare
+    srv.engine.select_batched = spy_batched
+    base = np.zeros((n, d), np.float32)
+    srv.update_embeddings(np.arange(n), base)
+
+    stop = threading.Event()
+
+    def churn():
+        v = 0
+        while not stop.is_set():
+            v += 1
+            srv.update_embeddings(np.arange(n), base + np.float32(v))
+
+    writer = threading.Thread(target=churn)
+    writer.start()
+    try:
+        seen = []
+        for _ in range(60):
+            _, res = srv.select_cohort(6)
+            with spy_lock:
+                seen.append(markers[id(res)][1])
+        assert violations == []
+        # the served generation never moves backwards across selects
+        assert all(a <= b for a, b in zip(seen, seen[1:]))
+    finally:
+        stop.set()
+        writer.join(timeout=30)
+        srv.close()
+    assert srv.stats()["warm_ahead"] >= 1
+
+
+def test_max_stale_versions_bounds_staleness_deterministically():
+    n, d = 48, 4
+    solver = DummySolver()                 # nothing ever warms
+    srv = CohortServer(n, d, seed=0, config=CFG, solver=solver,
+                       streaming=StreamingSpec(max_stale_versions=1))
+    srv.update_embeddings(np.arange(n),
+                          np.ones((n, d), np.float32))
+    srv.select_cohort(4)                   # nothing warmed: inline (v1)
+    assert srv.stats()["forced_inline"] == 1
+    srv.select_cohort(4)                   # served v1 == table v1: warm
+    srv.update_embeddings([0], np.zeros((1, d), np.float32))
+    srv.select_cohort(4)                   # v2 - v1 == 1 <= max_stale: warm
+    assert srv.stats()["forced_inline"] == 1
+    assert srv.stats()["served_warm"] == 2
+    srv.update_embeddings([0], np.ones((1, d), np.float32))
+    srv.select_cohort(4)                   # v3 - v1 == 2 > 1: forced inline
+    st = srv.stats()
+    assert st["forced_inline"] == 2
+    assert st["streaming"]["served_version"] == 3
+
+
+def test_unbounded_staleness_never_solves_inline_again():
+    n, d = 48, 4
+    srv = CohortServer(n, d, seed=0, config=CFG, solver=DummySolver(),
+                       streaming=StreamingSpec(max_stale_versions=None))
+    srv.update_embeddings(np.arange(n), np.ones((n, d), np.float32))
+    srv.select_cohort(4)
+    for v in range(10):                    # ten generations behind
+        srv.update_embeddings([0], np.full((1, d), v, np.float32))
+        srv.select_cohort(4)
+    st = srv.stats()
+    assert st["forced_inline"] == 1
+    assert st["served_warm"] == 10
+
+
+# -- admission control (satellite + tentpole) ------------------------------
+
+def test_queue_depth_sheds_deterministically():
+    adm = AdmissionController(max_queue_depth=2, name="t0")
+    adm.try_admit()
+    adm.try_admit()
+    with pytest.raises(QueueFullError) as exc:
+        adm.try_admit()
+    assert exc.value.tenant == "t0"
+    assert isinstance(exc.value, ShedError)
+    adm.release()
+    adm.try_admit()                        # freed depth re-admits
+    assert adm.stats() == {"admitted": 3, "shed_queue": 1, "shed_rate": 0,
+                           "depth": 2}
+
+
+def test_token_bucket_sheds_and_refills_on_a_fake_clock():
+    now = [0.0]
+    adm = AdmissionController(rate_per_s=2.0, burst=2,
+                              clock=lambda: now[0])
+    adm.try_admit(), adm.release()
+    adm.try_admit(), adm.release()
+    with pytest.raises(RateLimitError):
+        adm.try_admit()                    # bucket empty at t=0
+    now[0] = 0.5                           # 0.5s * 2/s = one token back
+    adm.try_admit()
+    adm.release()
+    with pytest.raises(RateLimitError):
+        adm.try_admit()
+    assert adm.stats()["shed_rate"] == 2
+
+
+def test_frontend_sheds_past_configured_depth_with_typed_error():
+    """One select parked inside the engine pins the tenant's only
+    admission slot; the next select sheds with QueueFullError before
+    touching any batching or engine state."""
+    spec = StreamingSpec(max_queue_depth=1)
+    fe = CohortFrontend([TenantSpec("vision", 48, 4, config=CFG,
+                                    streaming=spec)])
+    fe.update_embeddings("vision", np.arange(48),
+                         np.ones((48, 4), np.float32))
+    srv = fe.tenant("vision")
+    entered, release = threading.Event(), threading.Event()
+    orig = srv.engine.select_batched
+
+    def slow(table, requests=1):
+        entered.set()
+        release.wait(timeout=30)
+        return orig(table, requests=requests)
+
+    srv.engine.select_batched = slow
+    out = []
+    worker = threading.Thread(
+        target=lambda: out.append(fe.select_cohort("vision", 4)))
+    worker.start()
+    try:
+        assert entered.wait(timeout=30)    # leader holds the one slot
+        with pytest.raises(QueueFullError):
+            fe.select_cohort("vision", 4)
+    finally:
+        release.set()
+        worker.join(timeout=30)
+    assert len(out) == 1
+    assert fe.stats()["frontend"]["shed"] == 1
+    fe.close()
+
+
+# -- cross-tenant dedupe (tentpole) ----------------------------------------
+
+def test_identical_fingerprint_tenants_ride_one_engine_solve():
+    n, d = 64, 4
+    fe = CohortFrontend(
+        [TenantSpec(f"family-{i}", n, d, config=CFG, seed=i)
+         for i in range(2)],
+        streaming=StreamingSpec())
+    try:
+        x = np.random.default_rng(7).normal(size=(n, d)).astype(np.float32)
+        for name in fe.tenant_names:
+            fe.update_embeddings(name, np.arange(n), x)
+        assert wait_until(
+            lambda: all(fe.tenant(t).stats()["warm_ahead"] >= 1
+                        for t in fe.tenant_names))
+        stats = [fe.tenant(t).stats() for t in fe.tenant_names]
+        # exactly ONE engine actually solved; the other adopted it
+        assert sum(s["engine"]["cold_starts"] for s in stats) == 1
+        assert sum(s["engine"]["solves"] for s in stats) == 1
+        assert sum(s["dedupe_hit"] for s in stats) == 1
+        assert fe.stats()["frontend"]["dedupe_hit"] == 1
+        # both serve the warmed result without an inline solve
+        for name in fe.tenant_names:
+            fe.select_cohort(name, 8)
+        assert all(fe.tenant(t).stats()["forced_inline"] == 0
+                   for t in fe.tenant_names)
+    finally:
+        fe.close()
+
+
+def test_different_configs_do_not_share_solves():
+    n, d = 64, 4
+    fe = CohortFrontend(
+        [TenantSpec("a", n, d, config=CohortConfig(num_clusters=3)),
+         TenantSpec("b", n, d, config=CohortConfig(num_clusters=4))],
+        streaming=StreamingSpec())
+    try:
+        x = np.random.default_rng(7).normal(size=(n, d)).astype(np.float32)
+        for name in fe.tenant_names:
+            fe.update_embeddings(name, np.arange(n), x)
+        assert wait_until(
+            lambda: all(fe.tenant(t).stats()["warm_ahead"] >= 1
+                        for t in fe.tenant_names))
+        stats = [fe.tenant(t).stats() for t in fe.tenant_names]
+        assert sum(s["engine"]["cold_starts"] for s in stats) == 2
+        assert sum(s["dedupe_hit"] for s in stats) == 0
+    finally:
+        fe.close()
+
+
+# -- graceful shutdown (satellite) -----------------------------------------
+
+def test_frontend_close_drains_joins_and_rejects():
+    n, d = 48, 4
+    fe = CohortFrontend([TenantSpec("vision", n, d, config=CFG)],
+                        streaming=StreamingSpec())
+    fe.update_embeddings("vision", np.arange(n),
+                         np.ones((n, d), np.float32))
+    fe.select_cohort("vision", 4)
+    solver = fe._solver
+    fe.close()
+    assert all(not t.is_alive() for t in solver._threads)
+    with pytest.raises(ServiceClosedError):
+        fe.select_cohort("vision", 4)
+    with pytest.raises(ServiceClosedError):
+        fe.tenant("vision").select_cohort(4)
+    fe.close()                             # idempotent
+
+
+def test_frontend_context_manager_closes():
+    n, d = 48, 4
+    with CohortFrontend([TenantSpec("vision", n, d, config=CFG)],
+                        streaming=StreamingSpec()) as fe:
+        fe.update_embeddings("vision", np.arange(n),
+                             np.ones((n, d), np.float32))
+        ids, _ = fe.select_cohort("vision", 4)
+        assert len(ids) == 4
+    with pytest.raises(ServiceClosedError):
+        fe.select_cohort("vision", 4)
+
+
+# -- background solver unit ------------------------------------------------
+
+def test_background_solver_coalesces_per_key_latest_wins():
+    ran = []
+    gate = threading.Event()
+    solver = BackgroundSolver(workers=1)
+    try:
+        solver.submit("block", gate.wait)  # occupy the single worker
+        for i in range(5):                 # all coalesce onto one key
+            solver.submit("t", lambda i=i: ran.append(i))
+        gate.set()
+        assert solver.drain(timeout=20)
+        assert ran == [4]                  # only the latest-submitted ran
+        assert solver.stats["coalesced"] == 4
+    finally:
+        solver.close(timeout=20)
+    assert solver.submit("t", lambda: None) is False   # closed
+
+
+def test_background_solver_task_error_is_counted_not_fatal():
+    solver = BackgroundSolver(workers=1)
+    try:
+        solver.submit("bad", lambda: 1 / 0)
+        assert wait_until(lambda: solver.stats["errors"] == 1)
+        ran = []
+        solver.submit("ok", lambda: ran.append(1))
+        assert solver.drain(timeout=20)
+        assert ran == [1]                  # worker survived the error
+    finally:
+        solver.close(timeout=20)
+
+
+def test_solve_deduper_lead_wait_adopt_and_abort():
+    dd = SolveDeduper(capacity=2)
+    ticket, prep = dd.begin(b"fp1")
+    assert ticket is not None and prep is None
+    dd.complete(ticket, "solved-1")
+    assert dd.begin(b"fp1") == (None, "solved-1")      # done-cache hit
+    t2, _ = dd.begin(b"fp2")
+    dd.abort(t2)
+    t3, prep3 = dd.begin(b"fp2")           # abort left nothing behind
+    assert t3 is not None and prep3 is None
+    dd.complete(t3, "solved-2")
+    assert dd.stats["leads"] == 3 and dd.stats["aborts"] == 1
+
+
+# -- lock-order watchdog over the streaming herd (satellite) ---------------
+
+def test_watchdog_instrumented_streaming_herd_obeys_lock_order():
+    """Extends the frontend herd test to the background-solver publish
+    edge: every lock in the streaming stack — server, tenant, frontend,
+    shared solver, deduper, admission — swapped for rank-asserting
+    OrderedLocks, then selects/updates/observes race the background
+    warms.  Any acquisition against SERVING_LOCK_ORDER (e.g. a worker
+    taking the select lock, or publish nesting into solve) raises
+    LockOrderError deterministically."""
+    from repro.analysis import instrument
+
+    n, d = 96, 8
+    fast_dqn = {"hidden": (32,), "eps_decay_steps": 30,
+                "buffer_size": 512, "batch_size": 64}
+    fe = CohortFrontend(
+        [TenantSpec(f"family-{i}", n, d, config=CFG, seed=i,
+                    policy="dqn", dqn_overrides=fast_dqn)
+         for i in range(2)],
+        streaming=StreamingSpec(max_stale_versions=2))
+    assert instrument(fe) == ["_registry_lock"]
+    assert instrument(fe._solver) == ["_queue_lock"]
+    assert instrument(fe._deduper) == ["_dedupe_lock"]
+    for name in fe.tenant_names:
+        tenant = fe._tenants[name]
+        assert instrument(tenant, prefix=f"{name}:") == ["lock"]
+        assert sorted(instrument(tenant.server, prefix=f"{name}:")) == [
+            "_publish_lock", "_select_lock", "_solve_lock",
+            "_stats_lock", "_write_lock"]
+        assert instrument(tenant.server.admission,
+                          prefix=f"{name}:") == ["_admission_lock"]
+    rng = np.random.default_rng(0)
+    for name in fe.tenant_names:
+        fe.update_embeddings(name, np.arange(n),
+                             rng.normal(size=(n, d)).astype(np.float32))
+
+    errors, done = [], []
+
+    def hammer(i):
+        name = fe.tenant_names[i % len(fe.tenant_names)]
+        server = fe.tenant(name)
+        local = np.random.default_rng(i)
+        try:
+            for _ in range(4):
+                ids, _ = fe.select_cohort(name, 6)
+                server.observe_round(0.5 + 0.01 * len(ids))
+                server.update_embeddings(
+                    ids, local.normal(size=(len(ids), d)).astype(np.float32))
+                fe.stats()
+            done.append(i)
+        except Exception as exc:        # pragma: no cover - failure path
+            errors.append(exc)
+
+    threads = [threading.Thread(target=hammer, args=(i,))
+               for i in range(8)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join(timeout=120)
+    assert errors == []
+    assert len(done) == 8
+    # the background solver must not have tripped the watchdog either
+    assert fe._solver.stats["errors"] == 0
+    fe.close()
