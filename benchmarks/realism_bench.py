@@ -1,0 +1,249 @@
+"""Client-realism scenario suite: selection policies under system chaos.
+
+The paper's Table 2 compares policies in an *ideal* simulation — every
+selected client responds instantly.  This suite re-runs the comparison
+under the fault-injection layer (``repro.fed.realism``): IID / non-IID
+data skew crossed with five system-heterogeneity scenarios —
+
+  none        benign trace (realism plumbing on, failure modes off)
+  diurnal     half the population availability-phased a half-day apart
+  stragglers  a label-correlated slow tier that always misses the
+              round deadline (the server eats the full deadline wait)
+  dropout     a label-correlated flaky group with a mid-round hazard
+  churn       clients leave/rejoin the population between rounds
+
+Failure groups are **correlated with data heterogeneity** (each
+client's majority label), so under non-IID skew they align with the
+embedding clusters Algorithm I finds — which is exactly what gives the
+cluster-level DQN something to learn: avoid the slow/flaky clusters,
+keep the accuracy signal.  Stratified round-robin, by construction,
+keeps spending cohort slots on them and pays the deadline wait every
+round.  The headline metric is therefore **simulated wall-clock to
+target accuracy** (``FederatedRunner.sim_seconds_to_accuracy``), not
+just rounds.
+
+Everything is deterministic given the seed: traces draw from
+``SeedSequence([seed, stream, round])`` and all round timings go
+through the runner's ``SimClock``, so ``--check`` gates on exact
+replays, not noisy wall time.  Emits ``BENCH_fed.json``.
+
+  PYTHONPATH=src python -m benchmarks.realism_bench           # full grid
+  PYTHONPATH=src python -m benchmarks.realism_bench --small --check  # CI
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+
+import numpy as np
+
+from benchmarks.fl_common import DEFAULTS, MAX_ROUNDS, TARGETS
+
+SCENARIOS = ("none", "diurnal", "stragglers", "dropout", "churn")
+SKEWS = {"iid": 0.0, "noniid": 0.8}
+POLICIES = ("stratified", "dqre_sc")
+#: scenarios where the label-correlated failure group gives the DQN a
+#: learnable system-heterogeneity signal (the --check gate set)
+GATED = ("stragglers", "dropout")
+
+
+def _majority_labels(runner) -> np.ndarray:
+    """Per-client majority label — the axis failure groups correlate on."""
+    return np.array([
+        np.bincount(runner.y_train[s],
+                    minlength=runner.spec.num_classes).argmax()
+        for s in runner.shards])
+
+
+def build_trace(scenario: str, runner, seed: int):
+    """(ClientTrace, RoundSpec) for one scenario, correlated with the
+    runner's own partition: clients whose majority label falls in the
+    upper half of the label space form the slow/flaky/phase-shifted
+    group, so under non-IID skew the failure modes line up with the
+    embedding clusters the policies see."""
+    from repro.fed import ClientTrace, RoundSpec, TraceSpec
+
+    n = runner.cfg.num_clients
+    flaky = _majority_labels(runner) >= runner.spec.num_classes // 2
+    if scenario == "none":
+        spec = TraceSpec(latency_jitter=0.05)
+        rspec = RoundSpec()
+    elif scenario == "diurnal":
+        spec = TraceSpec(availability="diurnal", day_period_s=120.0,
+                         avail_floor=0.05, avail_amplitude=0.9,
+                         phase_assign=tuple(np.where(flaky, 0.5, 0.0)),
+                         latency_jitter=0.05)
+        rspec = RoundSpec(reward_blend=0.5)
+    elif scenario == "stragglers":
+        spec = TraceSpec(tiers=(1.0, 12.0),
+                         tier_assign=tuple(flaky.astype(int)),
+                         base_latency_s=1.0, latency_jitter=0.1)
+        # the slow tier's ~12s latency can never beat the 5s deadline:
+        # every slot spent on it is a dropped client + a full 5s wait
+        rspec = RoundSpec(deadline_s=5.0, reward_blend=0.5)
+    elif scenario == "dropout":
+        # flaky-group hazard 0.6*5 = 3.0 over a ~1s exposure: a flaky
+        # pick drops with p ~ 1-exp(-3) ~ 0.95 — the slot is wasted
+        # almost every time, so avoiding the cluster is worth rounds
+        spec = TraceSpec(dropout_hazard=0.6,
+                         hazard_assign=tuple(np.where(flaky, 5.0, 0.05)),
+                         latency_jitter=0.1)
+        rspec = RoundSpec(reward_blend=0.5)
+    elif scenario == "churn":
+        spec = TraceSpec(p_leave=0.15, p_join=0.3, latency_jitter=0.05)
+        rspec = RoundSpec(reward_blend=0.25)
+    else:
+        raise ValueError(f"unknown scenario {scenario!r}")
+    return ClientTrace(n, spec, seed=seed), rspec
+
+
+def run_one(dataset: str, policy: str, scenario: str, skew: str,
+            seed: int = 0, max_rounds: int = None) -> dict:
+    from repro.fed import FederatedRunner, RunnerConfig
+
+    cfg = RunnerConfig(dataset=dataset, policy=policy, sigma=SKEWS[skew],
+                       target_accuracy=TARGETS[dataset], seed=seed,
+                       # fast exploration decay: the quick-scale runs are
+                       # short, so the DQN must commit to what it learned
+                       # about slow/flaky clusters within a few rounds
+                       eps_decay_steps=5,
+                       **DEFAULTS)
+    runner = FederatedRunner(cfg)
+    trace, rspec = build_trace(scenario, runner, seed)
+    runner.attach_trace(trace, rspec)
+    runner.run(max_rounds or MAX_ROUNDS, stop_at_target=True)
+    hist = runner.history
+    return {
+        "dataset": dataset, "scenario": scenario, "skew": skew,
+        "policy": policy, "seed": seed,
+        "rounds_run": len(hist),
+        "rounds_to_target": runner.rounds_to_accuracy(),
+        "sim_s_to_target": runner.sim_seconds_to_accuracy(),
+        "sim_s_total": sum(r.sim_seconds for r in hist),
+        "final_accuracy": hist[-1].accuracy,
+        "completed_total": int(sum(r.num_completed for r in hist)),
+        "dropped_total": int(sum(r.num_dropped for r in hist)),
+        "stragglers_total": int(sum(r.num_stragglers for r in hist)),
+        "mean_attainment": float(np.mean(
+            [r.outcome.attainment for r in hist])),
+    }
+
+
+def _rank_key(rec: dict, max_rounds: int):
+    """Orders policies: fewest rounds to target, then least simulated
+    wall clock, then (for never-reached runs) highest final accuracy."""
+    r, s = rec["rounds_to_target"], rec["sim_s_to_target"]
+    return (r if r is not None else max_rounds + 1,
+            s if s is not None else float("inf"),
+            -rec["final_accuracy"])
+
+
+def run(csv_rows: list, *, dataset: str = "mnist", seed: int = 0,
+        small: bool = False, max_rounds: int = None,
+        out: str = "BENCH_fed.json") -> dict:
+    max_rounds = max_rounds or MAX_ROUNDS
+    skews = ("noniid",) if small else tuple(SKEWS)
+    scenarios = GATED if small else SCENARIOS
+    records, wins = [], []
+    for skew in skews:
+        for scenario in scenarios:
+            pair = {}
+            for policy in POLICIES:
+                rec = run_one(dataset, policy, scenario, skew,
+                              seed=seed, max_rounds=max_rounds)
+                records.append(rec)
+                pair[policy] = rec
+                rt = rec["rounds_to_target"]
+                ss = rec["sim_s_to_target"]
+                csv_rows.append((
+                    f"realism/{skew}/{scenario}/{policy}",
+                    0.0 if ss is None else ss * 1e6,
+                    f"rounds_to_target="
+                    f"{'never' if rt is None else rt} "
+                    f"sim_s={'inf' if ss is None else f'{ss:.1f}'} "
+                    f"acc={rec['final_accuracy']:.3f} "
+                    f"attainment={rec['mean_attainment']:.2f}"))
+                print(f"{skew}/{scenario}/{policy}: "
+                      f"rounds={'never' if rt is None else rt} "
+                      f"sim_s={'inf' if ss is None else f'{ss:.1f}'} "
+                      f"acc={rec['final_accuracy']:.3f} "
+                      f"dropped={rec['dropped_total']}")
+            dqn, strat = pair["dqre_sc"], pair["stratified"]
+            if _rank_key(dqn, max_rounds) < _rank_key(strat, max_rounds):
+                wins.append(f"{skew}/{scenario}")
+    summary = {
+        "unit": "simulated_seconds_to_target",
+        "dataset": dataset, "target_accuracy": TARGETS[dataset],
+        "max_rounds": max_rounds, "seed": seed, "small": small,
+        "defaults": dict(DEFAULTS),
+        "dqn_wins": wins,
+        "records": records,
+    }
+    with open(out, "w") as fh:
+        json.dump(summary, fh, indent=2)
+    print(f"dqre_sc beats stratified under: {wins or 'none'}")
+    return summary
+
+
+def check(summary: dict) -> int:
+    """CI gate: on every GATED non-IID scenario the DQN must reach the
+    target in no more rounds than stratified — and strictly less
+    simulated wall clock when both reach it."""
+    max_rounds = summary["max_rounds"]
+    by = {(r["skew"], r["scenario"], r["policy"]): r
+          for r in summary["records"]}
+    failures = []
+    for scenario in GATED:
+        dqn = by.get(("noniid", scenario, "dqre_sc"))
+        strat = by.get(("noniid", scenario, "stratified"))
+        if dqn is None or strat is None:
+            failures.append(f"{scenario}: gated records missing")
+            continue
+        rd = dqn["rounds_to_target"] or max_rounds + 1
+        rs = strat["rounds_to_target"] or max_rounds + 1
+        if rd > rs:
+            failures.append(
+                f"{scenario}: dqre_sc rounds-to-target {rd} > "
+                f"stratified {rs}")
+        if (dqn["sim_s_to_target"] is not None
+                and strat["sim_s_to_target"] is not None
+                and dqn["sim_s_to_target"] >= strat["sim_s_to_target"]):
+            failures.append(
+                f"{scenario}: dqre_sc sim_s {dqn['sim_s_to_target']:.1f} "
+                f">= stratified {strat['sim_s_to_target']:.1f}")
+    if failures:
+        for f in failures:
+            print(f"FAIL: {f}")
+        return 1
+    print(f"ok: dqre_sc <= stratified (rounds) and < (sim wall clock) "
+          f"on {', '.join(GATED)}")
+    return 0
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--dataset", default="mnist", choices=sorted(TARGETS))
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--max-rounds", type=int, default=None)
+    ap.add_argument("--small", action="store_true",
+                    help="CI-sized run: non-IID skew only, gated "
+                         "scenarios only")
+    ap.add_argument("--check", action="store_true",
+                    help="fail unless dqre_sc reaches the target in "
+                         "<= stratified's rounds (and less simulated "
+                         "wall clock) on the gated scenarios")
+    ap.add_argument("--out", default="BENCH_fed.json")
+    args = ap.parse_args()
+
+    rows: list = []
+    summary = run(rows, dataset=args.dataset, seed=args.seed,
+                  small=args.small, max_rounds=args.max_rounds,
+                  out=args.out)
+    if args.check:
+        return check(summary)
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

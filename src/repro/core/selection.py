@@ -124,6 +124,58 @@ class FavorSelection(SelectionPolicy):
         self.agent.train_step(self.rng)
 
 
+def _make_cohort_config(num_clusters, approx_method, num_landmarks,
+                        landmarks, use_pallas, auto_k, warm_start):
+    """Engine config shared by the cluster-based policies (stratified +
+    dqre_sc).  approx_method maps 1:1 onto engine methods ("dense",
+    "nystrom", "sharded", "auto"); "dense" stays the default so small
+    simulated cohorts keep the exact Algorithm I path."""
+    from repro.cohort import CohortConfig
+    return CohortConfig(num_clusters=num_clusters, method=approx_method,
+                        num_landmarks=num_landmarks, landmarks=landmarks,
+                        use_pallas=use_pallas, auto_k=auto_k,
+                        warm_start=warm_start)
+
+
+class StratifiedSelection(SelectionPolicy):
+    """Cluster-stratified uniform draw: Algorithm I without Algorithm II.
+
+    Clusters the client embeddings through the same
+    :class:`repro.cohort.CohortEngine` as DQRE-SCnet, then draws the
+    cohort round-robin across clusters (pools shuffled, popped without
+    replacement) — the serving path's ``policy="stratified"`` baseline,
+    here for the simulation so the realism benchmarks can isolate what
+    the *learned* cluster choice adds under system heterogeneity.
+    """
+    name = "stratified"
+
+    def __init__(self, num_clients, clients_per_round, embed_dim, seed=0,
+                 num_clusters: int = 8, use_pallas: bool = False,
+                 auto_k: bool = False, approx_method: str = "dense",
+                 num_landmarks: Optional[int] = None,
+                 landmarks: str = "uniform", warm_start: bool = True):
+        super().__init__(num_clients, clients_per_round, embed_dim, seed)
+        from repro.cohort import CohortEngine
+        self.num_clusters = num_clusters
+        self.engine = CohortEngine(
+            _make_cohort_config(num_clusters, approx_method, num_landmarks,
+                                landmarks, use_pallas, auto_k, warm_start),
+            seed=seed + 1)
+
+    def select(self, state: RoundState) -> np.ndarray:
+        assign = self.engine.select(state.client_embeds).assign
+        pools = [list(np.flatnonzero(assign == c))
+                 for c in range(self.num_clusters)]
+        for pool in pools:
+            self.rng.shuffle(pool)
+        picked: list = []
+        while len(picked) < self.clients_per_round and any(pools):
+            for pool in pools:
+                if pool and len(picked) < self.clients_per_round:
+                    picked.append(pool.pop())
+        return np.asarray(picked)
+
+
 class DQREScSelection(SelectionPolicy):
     """DQRE-SCnet (the paper): spectral clustering + cluster-level DQN.
 
@@ -147,17 +199,12 @@ class DQREScSelection(SelectionPolicy):
                  cohort_config=None,
                  dqn_overrides: Optional[dict] = None):
         super().__init__(num_clients, clients_per_round, embed_dim, seed)
-        from repro.cohort import CohortConfig, CohortEngine
+        from repro.cohort import CohortEngine
         self.num_clusters = num_clusters
         if cohort_config is None:
-            # approx_method maps 1:1 onto engine methods ("dense",
-            # "nystrom", "sharded", "auto"); "dense" stays the default so
-            # small simulated cohorts keep the exact Algorithm I path.
-            cohort_config = CohortConfig(
-                num_clusters=num_clusters, method=approx_method,
-                num_landmarks=num_landmarks, landmarks=landmarks,
-                use_pallas=use_pallas, auto_k=auto_k,
-                warm_start=warm_start)
+            cohort_config = _make_cohort_config(
+                num_clusters, approx_method, num_landmarks, landmarks,
+                use_pallas, auto_k, warm_start)
         else:
             if cohort_config.num_clusters != num_clusters:
                 # the DQN action space, the pool loop in select(), and
@@ -234,6 +281,7 @@ POLICIES = {
     "fedavg": RandomSelection,
     "kcenter": KCenterSelection,
     "favor": FavorSelection,
+    "stratified": StratifiedSelection,
     "dqre_sc": DQREScSelection,
 }
 

@@ -2,6 +2,9 @@ from repro.fed.datasets import make_dataset, DATASETS
 from repro.fed.partition import partition_non_iid, sigma_to_alpha
 from repro.fed.client import local_train
 from repro.fed.server import fedavg_aggregate, weight_delta_embedding
+from repro.fed.realism import (ClientTrace, RoundOutcome, RoundSpec,
+                               SimClock, TraceSpec, blended_reward,
+                               filter_survivors)
 from repro.fed.rounds import FederatedRunner, RoundResult, RunnerConfig
 from repro.fed.metrics import (classification_metrics, cluster_policy_state,
                                serving_state_dim)
@@ -9,5 +12,7 @@ from repro.fed.metrics import (classification_metrics, cluster_policy_state,
 __all__ = ["make_dataset", "DATASETS", "partition_non_iid", "sigma_to_alpha",
            "local_train", "fedavg_aggregate", "weight_delta_embedding",
            "FederatedRunner", "RoundResult", "RunnerConfig",
+           "ClientTrace", "RoundOutcome", "RoundSpec", "SimClock",
+           "TraceSpec", "blended_reward", "filter_survivors",
            "classification_metrics", "cluster_policy_state",
            "serving_state_dim"]

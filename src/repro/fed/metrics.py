@@ -21,6 +21,12 @@ are supported (the ``features`` knob, mirrored by
   cohort).  This is the serving analogue of the simulation state's
   cluster centroids — the served DQN sees cohesion and recency, not
   just participation bookkeeping.
+* ``"system"`` — ``7k + 1``: the rich features plus per-cluster
+  **availability** (EMA of the completed/dropped outcome of each
+  cluster's served clients, from ``repro.fed.realism`` round outcomes)
+  and **mean latency** (EMA of simulated round-trip seconds, squashed
+  to [0, 1)).  This is what lets the served DQN learn to route cohort
+  slots away from slow or flaky clusters, not just skewed ones.
 """
 
 from __future__ import annotations
@@ -30,7 +36,10 @@ from typing import Optional
 import numpy as np
 
 #: recognised feature sets for :func:`cluster_policy_state`.
-STATE_FEATURES = ("basic", "rich")
+STATE_FEATURES = ("basic", "rich", "system")
+
+#: per-cluster feature count of each layout (+1 for prev_accuracy).
+_FEATURES_PER_CLUSTER = {"basic": 3, "rich": 5, "system": 7}
 
 
 def serving_state_dim(k: int, features: str = "rich") -> int:
@@ -38,12 +47,13 @@ def serving_state_dim(k: int, features: str = "rich") -> int:
 
     ``3k + 1`` for ``"basic"`` (population / participation / reward EMA
     + previous accuracy), ``5k + 1`` for ``"rich"`` (+ dispersion and
-    staleness per cluster).
+    staleness per cluster), ``7k + 1`` for ``"system"`` (+ availability
+    and mean-latency per cluster).
     """
     if features not in STATE_FEATURES:
         raise ValueError(f"unknown state features {features!r}; "
                          f"expected one of {STATE_FEATURES}")
-    return (5 * k + 1) if features == "rich" else (3 * k + 1)
+    return _FEATURES_PER_CLUSTER[features] * k + 1
 
 
 def _check_per_cluster(name: str, arr: np.ndarray, k: int) -> np.ndarray:
@@ -99,6 +109,8 @@ def cluster_policy_state(assign: np.ndarray, k: int,
                          *,
                          embeds: Optional[np.ndarray] = None,
                          staleness: Optional[np.ndarray] = None,
+                         availability: Optional[np.ndarray] = None,
+                         latency_s: Optional[np.ndarray] = None,
                          features: str = "rich") -> np.ndarray:
     """Serving-side DQN state: per-cluster stats + last global accuracy.
 
@@ -111,19 +123,26 @@ def cluster_policy_state(assign: np.ndarray, k: int,
                        reward credited to draws from each cluster.
         prev_accuracy: global-model accuracy after the last round.
         embeds:        (n, d) embedding table behind ``assign``; required
-                       for ``features="rich"`` (dispersion).
+                       for ``features="rich"``/``"system"`` (dispersion).
         staleness:     (k,) count of selects since each cluster last
                        contributed a client to a served cohort; required
-                       for ``features="rich"``.
-        features:      ``"basic"`` (3k + 1) | ``"rich"`` (5k + 1).
+                       for ``features="rich"``/``"system"``.
+        availability:  (k,) EMA in [0, 1] of each cluster's served
+                       clients completing their round (vs dropping);
+                       required for ``features="system"``.
+        latency_s:     (k,) EMA of each cluster's simulated round-trip
+                       seconds; required for ``features="system"``.
+        features:      ``"basic"`` (3k + 1) | ``"rich"`` (5k + 1) |
+                       ``"system"`` (7k + 1).
 
     Returns:
         float32 vector ``[population_frac ‖ participation_frac ‖
-        reward_ema ( ‖ dispersion ‖ staleness_frac ) ‖ prev_accuracy]``
-        — population fraction is each cluster's share of clients,
-        participation fraction its share of all slots served (uniform
-        1/k before any draw, so round 0 is not a degenerate all-zeros
-        state), staleness squashed to [0, 1) via ``s / (1 + s)``.
+        reward_ema ( ‖ dispersion ‖ staleness_frac ( ‖ availability ‖
+        latency_frac )) ‖ prev_accuracy]`` — population fraction is each
+        cluster's share of clients, participation fraction its share of
+        all slots served (uniform 1/k before any draw, so round 0 is
+        not a degenerate all-zeros state), staleness and latency
+        squashed to [0, 1) via ``x / (1 + x)``.
     """
     if features not in STATE_FEATURES:
         raise ValueError(f"unknown state features {features!r}; "
@@ -135,19 +154,32 @@ def cluster_policy_state(assign: np.ndarray, k: int,
     total = participation.sum()
     part = (participation / total) if total > 0 else np.full(k, 1.0 / k)
     parts = [pop, part, reward]
-    if features == "rich":
+    if features in ("rich", "system"):
         if embeds is None:
             raise ValueError(
-                "cluster_policy_state: features='rich' needs the "
+                f"cluster_policy_state: features={features!r} needs the "
                 "embedding table (embeds=) for the dispersion features; "
                 "pass features='basic' for the participation-only state")
         if staleness is None:
             raise ValueError(
-                "cluster_policy_state: features='rich' needs the "
+                f"cluster_policy_state: features={features!r} needs the "
                 "per-cluster staleness counts (staleness=)")
         stale = _check_per_cluster("staleness", staleness, k)
         parts.append(cluster_dispersion(embeds, assign, k))
         parts.append(stale / (1.0 + stale))
+    if features == "system":
+        if availability is None or latency_s is None:
+            raise ValueError(
+                "cluster_policy_state: features='system' needs the "
+                "per-cluster availability (availability=) and mean "
+                "latency (latency_s=) EMAs — the client-realism "
+                "features from repro.fed.realism round outcomes")
+        avail = np.clip(
+            _check_per_cluster("availability", availability, k), 0.0, 1.0)
+        lat = np.maximum(
+            _check_per_cluster("latency_s", latency_s, k), 0.0)
+        parts.append(avail)
+        parts.append(lat / (1.0 + lat))
     parts.append([prev_accuracy])
     return np.concatenate(parts).astype(np.float32)
 

@@ -11,7 +11,7 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import List, Optional
+from typing import Callable, List, Optional
 
 import jax
 import numpy as np
@@ -23,6 +23,9 @@ from repro.fed.client import evaluate, local_train_cohort
 from repro.fed.datasets import make_dataset
 from repro.fed.metrics import classification_metrics
 from repro.fed.partition import partition_non_iid
+from repro.fed.realism import (ClientTrace, RoundOutcome, RoundSpec,
+                               SimClock, TraceSpec, blended_reward,
+                               filter_survivors)
 from repro.fed.server import fedavg_aggregate, weight_delta_embedding
 from repro.models.cnn import cnn_init
 
@@ -35,10 +38,21 @@ class RoundResult:
     reward: float
     selected: np.ndarray
     seconds: float
-    # per-phase wall times (monotonic perf_counter): select / train /
-    # aggregate / evaluate / update — so cohort-selection cost is
-    # attributable separately from local SGD when profiling a run.
+    # per-phase wall times through the runner's injectable clock
+    # (monotonic perf_counter by default; the realism layer's SimClock
+    # when a trace is attached, so benchmarks and replay tests agree):
+    # select / train / aggregate / evaluate / update — cohort-selection
+    # cost stays attributable separately from local SGD when profiling.
     timings: dict = dataclasses.field(default_factory=dict)
+    # client-realism accounting (zeros / None without a trace): how many
+    # of the selected cohort made aggregation, how many were dropped
+    # (unavailable / past-deadline / mid-round dropout), how many were
+    # stragglers, the round's simulated wall time, and the full outcome.
+    num_completed: int = 0
+    num_dropped: int = 0
+    num_stragglers: int = 0
+    sim_seconds: float = 0.0
+    outcome: Optional[RoundOutcome] = None
 
 
 @dataclasses.dataclass
@@ -71,10 +85,18 @@ class RunnerConfig:
     eps_end: float = 0.05
     eps_decay_steps: int = 200
     policy_kwargs: Optional[dict] = None
+    # client realism (fed/realism.py): a TraceSpec switches the runner
+    # onto the fault-injection layer (diurnal availability, straggler
+    # tiers, mid-round dropout, churn) driven by an owned SimClock;
+    # round_spec adds the wall-clock deadline + deadline-blended reward.
+    # None keeps today's ideal simulation bit-for-bit.
+    realism: Optional[TraceSpec] = None
+    round_spec: Optional[RoundSpec] = None
 
 
 class FederatedRunner:
-    def __init__(self, cfg: RunnerConfig):
+    def __init__(self, cfg: RunnerConfig, *,
+                 clock: Optional[Callable[[], float]] = None):
         self.cfg = cfg
         rng = np.random.default_rng(cfg.seed)
         self.rng = rng
@@ -98,7 +120,7 @@ class FederatedRunner:
         self.client_embeds = np.zeros((cfg.num_clients, cfg.embed_dim),
                                       np.float32)
         kw = dict(cfg.policy_kwargs or {})
-        if cfg.policy == "dqre_sc":
+        if cfg.policy in ("dqre_sc", "stratified"):
             kw.setdefault("num_clusters", cfg.num_clusters)
             kw.setdefault("use_pallas", cfg.use_pallas)
             kw.setdefault("approx_method", cfg.approx_method)
@@ -117,6 +139,38 @@ class FederatedRunner:
         self.round_idx = 0
         self.history: List[RoundResult] = []
         self._warmed_up = False
+        # injectable clock behind RoundResult.timings: host perf_counter
+        # by default, the simulated clock once a trace is attached (so
+        # timings are bit-identical across replays of the same trace)
+        self.sim_clock: Optional[SimClock] = None
+        self.trace: Optional[ClientTrace] = None
+        self.round_spec = cfg.round_spec or RoundSpec()
+        self._clock: Callable[[], float] = clock or time.perf_counter
+        if cfg.realism is not None:
+            self.attach_trace(
+                ClientTrace(cfg.num_clients, cfg.realism, seed=cfg.seed),
+                cfg.round_spec)
+
+    def attach_trace(self, trace: ClientTrace,
+                     spec: Optional[RoundSpec] = None) -> None:
+        """Enable client realism: fault-inject rounds from ``trace``.
+
+        Must be called before any round runs (benchmarks use it to pass
+        traces whose per-client tier/phase assignments are derived from
+        the runner's own data partition).  Switches the timing clock to
+        an owned :class:`SimClock` so every recorded time is simulated.
+        """
+        if self.round_idx or self.history:
+            raise RuntimeError("attach_trace: rounds already ran")
+        if trace.num_clients != self.cfg.num_clients:
+            raise ValueError(
+                f"trace covers {trace.num_clients} clients but the "
+                f"runner simulates {self.cfg.num_clients}")
+        self.trace = trace
+        if spec is not None:
+            self.round_spec = spec
+        self.sim_clock = SimClock()
+        self._clock = self.sim_clock
 
     # ------------------------------------------------------------------
     def _client_batches(self, client_ids):
@@ -159,33 +213,55 @@ class FederatedRunner:
         if not self._warmed_up:
             self.warmup()
         c = self.cfg
-        # perf_counter, not time.time(): monotonic, unaffected by NTP
-        # slews, and the basis of the per-phase attribution below.
-        t0 = time.perf_counter()
+        # every phase boundary reads the injectable clock: perf_counter
+        # by default (monotonic, unaffected by NTP slews), the realism
+        # layer's SimClock when a trace is attached — so the recorded
+        # timings are simulated, deterministic wall time under realism.
+        clock = self._clock
+        t0 = clock()
         state = self._round_state()
         selected = np.asarray(self.policy.select(state))
-        t_select = time.perf_counter()
+        t_select = clock()
 
-        stacked, losses = self._train_cohort(selected)
-        self.client_embeds[selected] = weight_delta_embedding(
-            self.embedder, stacked, self.global_params)
-        t_train = time.perf_counter()
-        weights = self.shard_sizes[selected]
-        self.global_params = fedavg_aggregate(stacked, weights)
-        t_aggregate = time.perf_counter()
+        outcome = None
+        survivors = selected
+        if self.trace is not None:
+            # fault-inject the round: unavailable clients refuse, slow
+            # ones miss the deadline, some drop mid-round — only the
+            # survivors train, update their embeddings, and aggregate
+            # (weights renormalize over them inside fedavg_aggregate)
+            outcome = self.trace.simulate_round(
+                self.round_idx, self.sim_clock.now(), selected,
+                self.round_spec)
+            survivors = outcome.completed
+            self.sim_clock.advance(outcome.elapsed_s)
+        if len(survivors):
+            stacked, _ = self._train_cohort(survivors)
+            self.client_embeds[survivors] = weight_delta_embedding(
+                self.embedder, stacked, self.global_params)
+        t_train = clock()
+        if len(survivors):
+            weights = self.shard_sizes[survivors]
+            self.global_params = fedavg_aggregate(stacked, weights)
+        t_aggregate = clock()
 
         acc, loss, _ = evaluate(self.global_params, self.x_test, self.y_test)
         # round boundary: accuracy immediately drives the host-side
         # reward shaping and policy update, so this sync is inherent
         # repro-lint: ignore[jax-blocking-sync]
         acc = float(acc)
-        t_evaluate = time.perf_counter()
-        reward = favor_reward(acc, c.target_accuracy)
+        t_evaluate = clock()
+        blend = self.round_spec.reward_blend
+        if outcome is not None and blend > 0.0:
+            reward = blended_reward(acc, c.target_accuracy,
+                                    outcome.attainment, blend=blend)
+        else:
+            reward = favor_reward(acc, c.target_accuracy)
         next_state = self._round_state()
         self.policy.update(state, next_state,
                            Feedback(acc, reward, selected))
         self.prev_acc = acc
-        t_update = time.perf_counter()
+        t_update = clock()
         # repro-lint: ignore[jax-blocking-sync] — same round boundary
         res = RoundResult(self.round_idx, acc, float(loss), reward, selected,
                           t_update - t0,
@@ -193,7 +269,15 @@ class FederatedRunner:
                                    "train": t_train - t_select,
                                    "aggregate": t_aggregate - t_train,
                                    "evaluate": t_evaluate - t_aggregate,
-                                   "update": t_update - t_evaluate})
+                                   "update": t_update - t_evaluate},
+                          num_completed=len(survivors),
+                          num_dropped=(0 if outcome is None
+                                       else len(outcome.dropped)),
+                          num_stragglers=(0 if outcome is None
+                                          else len(outcome.straggler_ids)),
+                          sim_seconds=(t_update - t0 if outcome is None
+                                       else outcome.elapsed_s),
+                          outcome=outcome)
         self.history.append(res)
         self.round_idx += 1
         return res
@@ -211,6 +295,23 @@ class FederatedRunner:
         for res in self.history:
             if res.accuracy >= target:
                 return res.round_idx + 1
+        return None
+
+    def sim_seconds_to_accuracy(self, target: Optional[float] = None):
+        """Cumulative simulated wall-clock seconds to the target accuracy.
+
+        The realism benchmarks' headline metric: under stragglers or
+        dropout a policy can match rounds-to-target yet pay the full
+        deadline every round — this metric sees that.  ``None`` if the
+        target was never reached.  Without an attached trace the
+        per-round ``sim_seconds`` are host-measured seconds.
+        """
+        target = target if target is not None else self.cfg.target_accuracy
+        total = 0.0
+        for res in self.history:
+            total += res.sim_seconds
+            if res.accuracy >= target:
+                return total
         return None
 
     def final_metrics(self) -> dict:

@@ -200,7 +200,11 @@ class CohortServer:
         dqn_overrides: DQNConfig field overrides for ``policy="dqn"``.
         state_features: DQN serving-state layout — ``"rich"`` (default,
             ``5k + 1``: + per-cluster embedding dispersion and
-            staleness) or ``"basic"`` (the legacy ``3k + 1``
+            staleness), ``"system"`` (``7k + 1``: + per-cluster
+            availability and mean-latency EMAs fed by
+            ``observe_round(outcome=...)`` from the client-realism
+            layer, so the policy can learn to avoid slow/flaky
+            clusters), or ``"basic"`` (the legacy ``3k + 1``
             participation-only state; keeps replay buffers recorded
             against the narrow shape loadable).
         streaming:    :class:`repro.streaming.StreamingSpec` enabling
@@ -302,6 +306,14 @@ class CohortServer:
         # selects since each cluster last contributed a served client
         # (the "rich" state's staleness feature)
         self._staleness = np.zeros(k, np.float64)       # guarded-by: _select_lock
+        # client-realism EMAs behind the "system" state: per-cluster
+        # completion rate and mean simulated latency, fed by
+        # observe_round(outcome=...); availability starts optimistic (1)
+        self._avail_ema = np.ones(k, np.float64)        # guarded-by: _select_lock
+        self._latency_ema_s = np.zeros(k, np.float64)   # guarded-by: _select_lock
+        # cluster assignment of the latest served solve (any policy) —
+        # maps an observe_round outcome's client ids back to clusters
+        self._last_assign = None                        # guarded-by: _select_lock
         self.prev_accuracy = 0.0                        # guarded-by: _select_lock
         # parked (state_vec, actions, assign, table) until observe_round
         self._pending = None                            # guarded-by: _select_lock
@@ -466,12 +478,15 @@ class CohortServer:
     def _policy_state(self, assign: np.ndarray,
                       table: np.ndarray) -> np.ndarray:
         from repro.fed.metrics import cluster_policy_state
-        rich = self.state_features == "rich"
+        rich = self.state_features in ("rich", "system")
+        system = self.state_features == "system"
         return cluster_policy_state(
             assign, self.config.num_clusters,
             self._participation, self._reward_ema, self.prev_accuracy,
             embeds=table if rich else None,
             staleness=self._staleness if rich else None,
+            availability=self._avail_ema if system else None,
+            latency_s=self._latency_ema_s if system else None,
             features=self.state_features)
 
     def select_cohort(self, cohort_size: int):
@@ -563,6 +578,7 @@ class CohortServer:
                         self._counters["forced_inline"] += 1
             t_solve = time.perf_counter()
             k = self.config.num_clusters
+            self._last_assign = res.assign
             pools = {c: list(np.flatnonzero(res.assign == c))
                      for c in range(k)}
             cohorts: List[np.ndarray] = []
@@ -613,8 +629,43 @@ class CohortServer:
             self.last_select_s = t1 - t0
             return [(picked, res) for picked in cohorts]
 
+    def _outcome_cluster_rates(self, outcome):
+        """Per-cluster completion/latency rates from a realism outcome.
+
+        Maps ``outcome.selected`` through the last solve's assignment
+        and bins the completed/dropped split and simulated round-trips
+        per cluster.  Returns ``(seen, avail, latency)`` — a boolean
+        mask of clusters observed this round plus this round's
+        completion-rate and mean-latency vectors (the "system" state
+        features) — or ``None`` when nothing maps.  Pure; the caller
+        holds ``_select_lock`` (reads ``_last_assign``) and applies the
+        EMA updates itself.
+        """
+        assign = self._last_assign
+        if assign is None or not len(outcome.selected):
+            return None
+        k = self.config.num_clusters
+        sel = np.asarray(outcome.selected)
+        lat = np.asarray(outcome.latencies_s)
+        in_table = (sel >= 0) & (sel < len(assign))
+        sel, lat = sel[in_table], lat[in_table]
+        if not len(sel):
+            return None
+        clusters = assign[sel]
+        completed = np.isin(sel, np.asarray(outcome.completed))
+        counts = np.bincount(clusters, minlength=k)[:k].astype(np.float64)
+        hits = np.bincount(clusters, weights=completed.astype(np.float64),
+                           minlength=k)[:k]
+        lat_sum = np.bincount(clusters, weights=lat, minlength=k)[:k]
+        seen = counts > 0
+        avail = np.zeros(k)
+        latency = np.zeros(k)
+        avail[seen] = hits[seen] / counts[seen]
+        latency[seen] = lat_sum[seen] / counts[seen]
+        return seen, avail, latency
+
     def observe_round(self, accuracy: float, timings: Optional[dict] = None,
-                      ) -> float:
+                      outcome=None) -> float:
         """Report a completed round back to the server; returns the reward.
 
         ``accuracy`` is the post-aggregation global-model accuracy of
@@ -625,14 +676,32 @@ class CohortServer:
         buffer and one TD minibatch runs.  ``timings`` (e.g.
         ``RoundResult.timings`` from ``repro.fed.rounds``) is folded
         into the per-phase running means reported by :meth:`stats`.
+        ``outcome`` (a ``repro.fed.realism.RoundOutcome``) feeds the
+        per-cluster availability/latency EMAs behind
+        ``state_features="system"`` and, when present, blends the
+        reward with deadline attainment (``repro.fed.realism
+        .blended_reward``) so slow/flaky clusters are penalized.
         """
         from repro.core.selection import favor_reward
 
-        reward = favor_reward(accuracy, self.target_accuracy)
+        if outcome is not None:
+            from repro.fed.realism import blended_reward
+            reward = blended_reward(accuracy, self.target_accuracy,
+                                    outcome.attainment)
+        else:
+            reward = favor_reward(accuracy, self.target_accuracy)
         # same lock as select_cohort: a racing selection must not park a
         # new (state, actions) transition between our read of _pending
         # and its clear, or that round's learning step would be dropped
         with self._select_lock:
+            if outcome is not None:
+                rates = self._outcome_cluster_rates(outcome)
+                if rates is not None:
+                    seen, avail, latency = rates
+                    self._avail_ema[seen] += _REWARD_EMA * (
+                        avail[seen] - self._avail_ema[seen])
+                    self._latency_ema_s[seen] += _REWARD_EMA * (
+                        latency[seen] - self._latency_ema_s[seen])
             if self.policy is not None and self._pending is not None:
                 state, actions, assign, table = self._pending
                 for c in set(actions):

@@ -14,8 +14,13 @@ component shared by both callers:
   embedding ‖ cluster centroids) each round.
 * ``CohortServer`` feeds it the *serving* state (per-cluster
   population / participation / reward statistics built by
-  :func:`repro.fed.metrics.cluster_policy_state`) and trains it online
-  from the accuracy signal of completed rounds.
+  :func:`repro.fed.metrics.cluster_policy_state` — ``"basic"``/
+  ``"rich"``, or ``"system"`` which adds the client-realism
+  availability + latency EMAs from ``repro.fed.realism`` round
+  outcomes) and trains it online from the accuracy signal of completed
+  rounds.  Under a deadline the reward may be the deadline-blended
+  shaping (:func:`repro.fed.realism.blended_reward`) instead of the
+  pure accuracy signal.
 
 The action space is the cluster index: one ε-greedy cluster choice per
 cohort slot, so a round's recorded ``actions`` are the per-slot cluster
@@ -50,7 +55,8 @@ class ClusterPolicy:
         dqn_overrides: optional :class:`~repro.core.dqn.DQNConfig` field
             overrides (e.g. ``{"eps_decay_steps": 50, "hidden": (32,)}``).
         state_features: optional label of the state layout this policy
-            was built for (e.g. ``"rich"`` for the server's ``5k + 1``
+            was built for (``"basic"`` 3k+1 / ``"rich"`` 5k+1 /
+            ``"system"`` 7k+1 of
             :func:`repro.fed.metrics.cluster_policy_state`).  Purely
             descriptive — reported by :meth:`stats` and echoed in the
             shape-mismatch error — the policy stays state-agnostic.

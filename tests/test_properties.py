@@ -109,3 +109,68 @@ def test_softmax_attention_rows_are_distributions(heads, seq, seed):
     out = attention_ref(q, kk, v, causal=True)
     # with constant V, any valid attention average returns exactly V
     np.testing.assert_allclose(np.asarray(out), 1.0, atol=1e-4)
+
+
+# -- client realism (fed/realism.py) ---------------------------------------
+
+@_settings
+@given(st.floats(-2.0, 2.0), st.floats(-1.0, 4.0), st.floats(1.0, 1e4),
+       st.floats(0.0, 1e6), st.integers(0, 2 ** 31 - 1))
+def test_availability_is_a_probability_for_arbitrary_params(
+        floor, amplitude, period, t, seed):
+    """Diurnal availability clips to [0, 1] no matter how pathological
+    the floor/amplitude knobs are."""
+    from repro.fed.realism import ClientTrace, TraceSpec
+
+    spec = TraceSpec(availability="diurnal", avail_floor=floor,
+                     avail_amplitude=amplitude, day_period_s=period)
+    a = ClientTrace(12, spec, seed=seed).availability(t)
+    assert a.shape == (12,)
+    assert np.all(a >= 0.0) and np.all(a <= 1.0)
+
+
+@_settings
+@given(st.integers(0, 2 ** 31 - 1), st.floats(0.0, 10.0),
+       st.one_of(st.none(), st.floats(0.1, 20.0)), st.integers(0, 50))
+def test_outcome_partitions_cohort_for_any_seed_and_hazard(
+        seed, hazard, deadline, round_idx):
+    """completed ∪ dropped == selected with no overlap, under any
+    combination of dropout hazard, deadline, and chaos seed."""
+    from repro.fed.realism import ClientTrace, RoundSpec, TraceSpec
+
+    spec = TraceSpec(availability="diurnal", dropout_hazard=hazard,
+                     tiers=(1.0, 3.0), p_join=0.2, p_leave=0.2)
+    trace = ClientTrace(40, spec, seed=seed)
+    sel = np.arange(1, 40, 2)
+    out = trace.simulate_round(round_idx, 7.0 * round_idx, sel,
+                               RoundSpec(deadline_s=deadline))
+    merged = np.concatenate([out.completed, out.dropped])
+    np.testing.assert_array_equal(np.sort(merged), np.sort(sel))
+    assert len(np.intersect1d(out.completed, out.dropped)) == 0
+    assert sum(out.reasons.values()) == len(out.dropped)
+    assert out.elapsed_s >= 0.0
+    if deadline is not None:
+        assert out.elapsed_s <= deadline + 1e-9 \
+            or out.reasons["deadline"] == 0
+
+
+@_settings
+@given(st.floats(1.0, 50.0), st.floats(1.0, 4.0),
+       st.integers(0, 2 ** 31 - 1))
+def test_round_wall_time_monotone_in_straggler_stretch(
+        stretch, factor, seed):
+    """Stretching the slow tier can only lengthen the simulated round:
+    wall time is monotone non-decreasing in the tier stretch (hazard
+    and availability off, so only latency moves)."""
+    from repro.fed.realism import ClientTrace, RoundSpec, TraceSpec
+
+    n = 16
+    assign = tuple(i % 2 for i in range(n))
+    sel = np.arange(n)
+
+    def elapsed(mult):
+        spec = TraceSpec(tiers=(1.0, mult), tier_assign=assign)
+        trace = ClientTrace(n, spec, seed=seed)
+        return trace.simulate_round(0, 0.0, sel, RoundSpec()).elapsed_s
+
+    assert elapsed(stretch * factor) >= elapsed(stretch) - 1e-12

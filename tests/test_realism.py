@@ -1,0 +1,341 @@
+"""Chaos suite for the client-realism layer (fed/realism.py).
+
+Deterministic fault injection: every scenario here is a fixed-seed
+replay, so availability dips, stragglers, mid-round dropouts and churn
+are asserted bit-for-bit — no flaky sleeps, no host randomness.
+"""
+
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.cohort import CohortConfig
+from repro.fed import (ClientTrace, FederatedRunner, RoundSpec, RunnerConfig,
+                       SimClock, TraceSpec, blended_reward, fedavg_aggregate,
+                       filter_survivors, serving_state_dim)
+from repro.core.selection import favor_reward
+from repro.launch.serve import CohortServer
+
+# tiny-but-real FL config for the runner-level tests: big enough that
+# accuracy moves, small enough to keep the suite fast
+TINY = dict(dataset="mnist", num_clients=10, clients_per_round=4,
+            sigma=0.5, local_steps=2, batch_size=8, train_size=512,
+            eval_size=128, policy="fedavg", seed=0)
+
+# a trace whose failure modes are all switched off: realism plumbing
+# active (SimClock, outcomes recorded) but every selected client
+# completes — the golden-regression control
+BENIGN = TraceSpec(availability="none", dropout_hazard=0.0,
+                   tiers=(1.0,), latency_jitter=0.0)
+
+CHAOS = TraceSpec(availability="diurnal", day_period_s=60.0,
+                  tiers=(1.0, 6.0), base_latency_s=1.0,
+                  dropout_hazard=0.1, p_join=0.3, p_leave=0.1)
+
+
+# -- SimClock ------------------------------------------------------------
+
+def test_sim_clock_monotone_and_injectable():
+    clk = SimClock()
+    assert clk.now() == 0.0 and clk() == 0.0     # callable: perf_counter API
+    assert clk.advance(2.5) == 2.5
+    assert clk.advance(0.0) == 2.5
+    with pytest.raises(ValueError):
+        clk.advance(-1.0)
+
+
+# -- availability --------------------------------------------------------
+
+def test_availability_always_a_probability():
+    # amplitude + floor deliberately exceed 1: the curve must clip
+    spec = TraceSpec(availability="diurnal", avail_floor=0.5,
+                     avail_amplitude=3.0)
+    trace = ClientTrace(32, spec, seed=1)
+    for t in (0.0, 17.3, 120.0, 1e6):
+        a = trace.availability(t)
+        assert a.shape == (32,)
+        assert np.all(a >= 0.0) and np.all(a <= 1.0)
+    # "none" model: everyone always up
+    assert np.all(ClientTrace(8, BENIGN, seed=0).availability(5.0) == 1.0)
+
+
+def test_diurnal_phase_staggers_clients():
+    spec = TraceSpec(availability="diurnal", day_period_s=100.0,
+                     avail_floor=0.0, avail_amplitude=1.0,
+                     phase_assign=(0.0, 0.5))
+    trace = ClientTrace(2, spec, seed=0)
+    a = trace.availability(25.0)         # client 0 at peak, client 1 at trough
+    assert a[0] == pytest.approx(1.0) and a[1] == pytest.approx(0.0, abs=1e-9)
+
+
+# -- churn ---------------------------------------------------------------
+
+def test_membership_round0_everyone_and_churn_step_delta():
+    trace = ClientTrace(40, CHAOS, seed=3)
+    assert trace.membership(0).all()
+    j0, l0 = trace.churn_step(0)
+    assert len(j0) == 0 and len(l0) == 0
+    for r in range(1, 6):
+        prev, cur = trace.membership(r - 1), trace.membership(r)
+        joined, left = trace.churn_step(r)
+        # the delta stream IS the membership diff
+        np.testing.assert_array_equal(joined, np.flatnonzero(~prev & cur))
+        np.testing.assert_array_equal(left, np.flatnonzero(prev & ~cur))
+        assert not np.intersect1d(joined, left).size
+    # lazily-built history is pure in (seed, spec, round): re-query agrees
+    np.testing.assert_array_equal(trace.membership(3),
+                                  ClientTrace(40, CHAOS, seed=3).membership(3))
+
+
+# -- the simulated round -------------------------------------------------
+
+def test_outcome_partitions_selected():
+    trace = ClientTrace(64, CHAOS, seed=7)
+    sel = np.arange(0, 64, 3)
+    out = trace.simulate_round(2, 30.0, sel, RoundSpec(deadline_s=3.0))
+    merged = np.sort(np.concatenate([out.completed, out.dropped]))
+    np.testing.assert_array_equal(merged, np.sort(sel))
+    assert not np.intersect1d(out.completed, out.dropped).size
+    assert sum(out.reasons.values()) == len(out.dropped)
+    assert 0.0 <= out.attainment <= 1.0
+    assert out.latencies_s.shape == (len(sel),)
+
+
+def test_deadline_drops_slow_tier_and_server_waits_full_deadline():
+    # clients 0-4 fast (stretch 1), 5-7 slow (stretch 50): with
+    # deadline 5 the slow tier always misses and the server eats the
+    # whole deadline as the round's wall time
+    spec = TraceSpec(tiers=(1.0, 50.0), tier_assign=(0,) * 5 + (1,) * 3,
+                     base_latency_s=1.0, latency_jitter=0.0)
+    trace = ClientTrace(8, spec, seed=0)
+    out = trace.simulate_round(0, 0.0, np.arange(8), RoundSpec(deadline_s=5.0))
+    np.testing.assert_array_equal(out.completed, [0, 1, 2, 3, 4])
+    np.testing.assert_array_equal(out.dropped, [5, 6, 7])
+    assert out.reasons == {"unavailable": 0, "deadline": 3, "dropout": 0}
+    assert out.elapsed_s == pytest.approx(5.0)
+    # no deadline: everyone completes, the slow tier sets the wall time
+    out2 = trace.simulate_round(0, 0.0, np.arange(8), RoundSpec())
+    assert len(out2.completed) == 8 and out2.elapsed_s == pytest.approx(50.0)
+    # the slow responders are flagged stragglers relative to the median
+    np.testing.assert_array_equal(out2.straggler_ids, [5, 6, 7])
+
+
+def test_dropout_hazard_zero_vs_overwhelming():
+    calm = ClientTrace(30, TraceSpec(dropout_hazard=0.0), seed=0)
+    out = calm.simulate_round(0, 0.0, np.arange(30), RoundSpec())
+    assert len(out.completed) == 30 and len(out.dropped) == 0
+    storm = ClientTrace(30, TraceSpec(dropout_hazard=50.0), seed=0)
+    out = storm.simulate_round(0, 0.0, np.arange(30), RoundSpec())
+    assert out.reasons["dropout"] == len(out.dropped) > 25
+    # a dropout disconnects partway through: wall time stays below the
+    # slowest survivor-or-dropout latency bound
+    assert out.elapsed_s <= float(out.latencies_s.max()) + 1e-9
+
+
+def test_outcomes_independent_of_selection_order():
+    """Draws are full (N,) vectors indexed by the cohort, so a client's
+    fate must not depend on where in the cohort it sits."""
+    trace = ClientTrace(32, CHAOS, seed=11)
+    spec = RoundSpec(deadline_s=4.0)
+    a = trace.simulate_round(1, 10.0, np.array([3, 9, 21, 30]), spec)
+    b = trace.simulate_round(1, 10.0, np.array([30, 21, 9, 3]), spec)
+    assert set(a.completed.tolist()) == set(b.completed.tolist())
+    assert set(a.dropped.tolist()) == set(b.dropped.tolist())
+
+
+def test_trace_replay_bit_identical():
+    t1 = ClientTrace(48, CHAOS, seed=42)
+    t2 = ClientTrace(48, CHAOS, seed=42)
+    other = ClientTrace(48, CHAOS, seed=43)
+    sel = np.arange(0, 48, 2)
+    spec = RoundSpec(deadline_s=3.0)
+    diverged = False
+    for r in range(5):
+        o1 = t1.simulate_round(r, r * 7.0, sel, spec)
+        o2 = t2.simulate_round(r, r * 7.0, sel, spec)
+        np.testing.assert_array_equal(o1.completed, o2.completed)
+        np.testing.assert_array_equal(o1.dropped, o2.dropped)
+        np.testing.assert_array_equal(o1.latencies_s, o2.latencies_s)
+        assert o1.elapsed_s == o2.elapsed_s and o1.reasons == o2.reasons
+        o3 = other.simulate_round(r, r * 7.0, sel, spec)
+        diverged |= (o3.reasons != o1.reasons
+                     or not np.array_equal(o3.latencies_s, o1.latencies_s))
+    assert diverged                       # the seed actually matters
+
+
+def test_trace_validation_errors():
+    with pytest.raises(ValueError, match="num_clients"):
+        ClientTrace(0)
+    with pytest.raises(ValueError, match="availability"):
+        ClientTrace(4, TraceSpec(availability="weekly"))
+    with pytest.raises(ValueError, match="tiers"):
+        ClientTrace(4, TraceSpec(tiers=(1.0, -2.0)))
+    with pytest.raises(ValueError, match="tier_assign"):
+        ClientTrace(4, TraceSpec(tiers=(1.0,), tier_assign=(0, 0, 1, 0)))
+    with pytest.raises(ValueError, match="one entry per"):
+        ClientTrace(4, TraceSpec(phase_assign=(0.1, 0.2)))
+    with pytest.raises(ValueError):
+        ClientTrace(4).membership(-1)
+
+
+# -- aggregation safety --------------------------------------------------
+
+def test_dropped_clients_cannot_poison_aggregation():
+    """A mid-round dropout's partial work — even NaN — must contribute
+    exactly nothing: survivors are sliced out BEFORE FedAvg and the
+    weights renormalize over them."""
+    k, shape = 5, (3, 2)
+    rng = np.random.default_rng(0)
+    stacked = {"w": rng.normal(size=(k, *shape)).astype(np.float32)}
+    weights = np.array([1.0, 2.0, 3.0, 4.0, 5.0], np.float32)
+    mask = np.array([True, False, True, False, True])
+    stacked["w"][~mask] = np.nan          # poisoned partial updates
+    fp, fw = filter_survivors(stacked, weights, mask)
+    assert fp["w"].shape == (3, *shape) and len(fw) == 3
+    agg = np.asarray(fedavg_aggregate(fp, fw)["w"])
+    assert np.isfinite(agg).all()
+    expect = np.average(stacked["w"][mask], axis=0, weights=weights[mask])
+    np.testing.assert_allclose(agg, expect, rtol=1e-6)
+    # all-survivors passthrough; zero-survivor rounds must be skipped
+    same_p, same_w = filter_survivors(stacked, weights, np.ones(k, bool))
+    assert same_p is stacked and same_w is weights
+    with pytest.raises(ValueError, match="no survivors"):
+        filter_survivors(stacked, weights, np.zeros(k, bool))
+
+
+def test_blended_reward_limits():
+    # blend=0 is exactly the paper's shaping
+    assert blended_reward(0.7, 0.85, 0.5, blend=0.0) == pytest.approx(
+        favor_reward(0.7, 0.85))
+    # full attainment adds nothing; zero attainment costs the blend share
+    assert blended_reward(0.85, 0.85, 1.0, blend=0.5) == pytest.approx(0.0)
+    assert blended_reward(0.85, 0.85, 0.0, blend=0.5) == pytest.approx(-0.5)
+    with pytest.raises(ValueError, match="blend"):
+        blended_reward(0.5, 0.85, 1.0, blend=1.5)
+
+
+# -- FederatedRunner integration -----------------------------------------
+
+def test_golden_regression_benign_trace_matches_ideal_runner():
+    """deadline=None + no failure modes: the realism path must reproduce
+    the ideal simulation bit-for-bit (accuracy, cohorts, rewards) —
+    fault injection off is the seed behavior."""
+    ideal = FederatedRunner(RunnerConfig(**TINY))
+    real = FederatedRunner(RunnerConfig(**TINY, realism=BENIGN))
+    h1, h2 = ideal.run(2), real.run(2)
+    for a, b in zip(h1, h2):
+        assert a.accuracy == b.accuracy and a.loss == b.loss
+        assert a.reward == b.reward
+        np.testing.assert_array_equal(a.selected, b.selected)
+        # the whole cohort completed; nothing dropped
+        assert b.num_completed == len(b.selected) and b.num_dropped == 0
+    # realism timings are simulated: each round costs the cohort's max
+    # latency (exactly base_latency_s with jitter 0) on the SimClock
+    assert real.sim_clock is not None
+    for res in h2:
+        assert res.sim_seconds == pytest.approx(BENIGN.base_latency_s)
+        assert res.outcome is not None and res.outcome.elapsed_s > 0
+    assert real.sim_clock.now() == pytest.approx(2 * BENIGN.base_latency_s)
+
+
+def test_runner_replay_bit_identical_under_chaos():
+    """The headline determinism contract: same (seed, trace, spec) ⇒
+    the full chaotic history replays exactly."""
+    cfg = RunnerConfig(**TINY, realism=CHAOS,
+                       round_spec=RoundSpec(deadline_s=3.0,
+                                            reward_blend=0.5))
+    h1 = FederatedRunner(cfg).run(3)
+    h2 = FederatedRunner(cfg).run(3)
+    assert any(r.num_dropped for r in h1)         # chaos actually bites
+    for a, b in zip(h1, h2):
+        assert a.accuracy == b.accuracy and a.reward == b.reward
+        np.testing.assert_array_equal(a.selected, b.selected)
+        np.testing.assert_array_equal(a.outcome.completed,
+                                      b.outcome.completed)
+        assert a.num_completed == b.num_completed
+        assert a.num_dropped == b.num_dropped
+        assert a.num_stragglers == b.num_stragglers
+        assert a.sim_seconds == b.sim_seconds
+        assert a.timings == b.timings             # SimClock: simulated phases
+        assert a.seconds == pytest.approx(sum(a.timings.values()))
+
+
+def test_attach_trace_guards():
+    runner = FederatedRunner(RunnerConfig(**TINY))
+    with pytest.raises(ValueError, match="clients"):
+        runner.attach_trace(ClientTrace(99, BENIGN, seed=0))
+    runner.run(1)
+    with pytest.raises(RuntimeError, match="already ran"):
+        runner.attach_trace(ClientTrace(TINY["num_clients"], BENIGN, seed=0))
+
+
+# -- serving: state_features="system" round trip -------------------------
+
+def test_system_state_round_trips_through_observe_round():
+    """A realism RoundOutcome fed to CohortServer.observe_round must (a)
+    blend the reward with deadline attainment, (b) move the per-cluster
+    availability/latency EMAs, and (c) produce 7k+1 system states that
+    the DQN accepts end to end."""
+    n, d, k = 60, 6, 3
+    rng = np.random.default_rng(0)
+    x = np.concatenate([rng.normal(size=(n // k, d)) + 8.0 * c
+                        for c in range(k)]).astype(np.float32)
+    srv = CohortServer(n, d, seed=0, policy="dqn",
+                       config=CohortConfig(num_clusters=k),
+                       state_features="system",
+                       dqn_overrides={"hidden": (16,), "buffer_size": 64,
+                                      "batch_size": 8})
+    assert srv.policy.agent.cfg.state_dim == serving_state_dim(k, "system")
+    assert serving_state_dim(k, "system") == 7 * k + 1
+    srv.update_embeddings(np.arange(n), x)
+
+    trace = ClientTrace(n, TraceSpec(tiers=(1.0, 40.0),
+                                     tier_assign=tuple([0] * (n // 2)
+                                                       + [1] * (n // 2)),
+                                     latency_jitter=0.0), seed=0)
+    spec = RoundSpec(deadline_s=5.0)
+    avail0 = srv._avail_ema.copy()
+    for r in range(3):
+        ids, _ = srv.select_cohort(8)
+        out = trace.simulate_round(r, 0.0, ids, spec)
+        reward = srv.observe_round(0.5, timings={"train": 0.1}, outcome=out)
+        assert reward == pytest.approx(
+            blended_reward(0.5, srv.target_accuracy, out.attainment))
+    # the slow half always misses the 5s deadline, so at least one
+    # cluster's completion-rate EMA fell from its optimistic start and
+    # every served cluster accumulated a latency estimate
+    assert (srv._avail_ema <= avail0 + 1e-12).all()
+    assert (srv._avail_ema < avail0).any()
+    assert (srv._latency_ema_s > 0).any()
+    assert srv.stats()["rounds_observed"] == 3
+    # without an outcome the reward falls back to the paper's shaping
+    ids, _ = srv.select_cohort(8)
+    assert srv.observe_round(0.6) == pytest.approx(
+        favor_reward(0.6, srv.target_accuracy))
+
+
+def test_churn_delta_feeds_update_embeddings():
+    """churn_step's (joined, left) ids are a valid update_embeddings
+    delta stream: versions bump once per churn event batch and the
+    served table reflects the latest rows."""
+    n, d = 20, 4
+    srv = CohortServer(n, d, seed=0, config=CohortConfig(num_clusters=2))
+    srv.update_embeddings(np.arange(n), np.ones((n, d), np.float32))
+    trace = ClientTrace(n, TraceSpec(p_join=0.5, p_leave=0.4), seed=5)
+    v = srv.version
+    for r in range(1, 6):
+        joined, left = trace.churn_step(r)
+        delta = np.concatenate([joined, left])
+        if not len(delta):
+            continue
+        rows = np.zeros((len(delta), d), np.float32)
+        rows[: len(joined)] = float(r)    # joins bring fresh embeddings
+        srv.update_embeddings(delta, rows)    # leaves tombstone to zeros
+        assert srv.version == v + 1
+        v = srv.version
+        table = srv.embeds
+        if len(left):
+            np.testing.assert_array_equal(table[left], 0.0)
+        if len(joined):
+            np.testing.assert_array_equal(table[joined], float(r))

@@ -430,6 +430,94 @@ def test_solve_deduper_lead_wait_adopt_and_abort():
     assert dd.stats["leads"] == 3 and dd.stats["aborts"] == 1
 
 
+# -- client-realism churn feeding the streaming path (satellite) -----------
+
+def test_churn_trace_drives_streaming_updates_while_selects_run():
+    """Trace-driven population churn (fed/realism.py) IS the delta
+    stream the streaming path was built for: a ClientTrace's per-round
+    (joined, left) ids feed ``update_embeddings`` from a writer thread
+    while selector threads race it.  Invariants: every successful
+    select is served from exactly one source (warm or forced-inline),
+    the served version never moves backwards, and the only rejection
+    surface is the typed ShedError the admission stats account for —
+    no raw exceptions leak."""
+    from repro.fed import ClientTrace, TraceSpec
+
+    n, d, selectors, each = 64, 4, 4, 25
+    srv = CohortServer(n, d, seed=0, config=CFG,
+                       streaming=StreamingSpec(max_queue_depth=2))
+    rng = np.random.default_rng(0)
+    srv.update_embeddings(np.arange(n),
+                          rng.normal(size=(n, d)).astype(np.float32))
+    trace = ClientTrace(n, TraceSpec(p_join=0.5, p_leave=0.3), seed=9)
+
+    stop = threading.Event()
+    churn_updates = []
+
+    def churner():
+        r = 1
+        fresh = np.random.default_rng(1)
+        while not stop.is_set():
+            joined, left = trace.churn_step(r)
+            delta = np.concatenate([joined, left])
+            if len(delta):
+                # joins carry fresh embedding rows, leaves tombstone
+                rows = np.zeros((len(delta), d), np.float32)
+                rows[: len(joined)] = fresh.normal(
+                    size=(len(joined), d)).astype(np.float32)
+                srv.update_embeddings(delta, rows)
+                churn_updates.append(r)
+            r += 1
+            time.sleep(0.001)
+
+    ok, sheds, errors = [], [], []
+    versions = {i: [] for i in range(selectors)}
+
+    def selector(i):
+        try:
+            for _ in range(each):
+                try:
+                    ids, _ = srv.select_cohort(6)
+                    assert len(ids) == 6
+                    versions[i].append(
+                        srv.stats()["streaming"]["served_version"])
+                    ok.append(i)
+                except ShedError:
+                    sheds.append(i)
+        except Exception as exc:        # pragma: no cover - failure path
+            errors.append(exc)
+
+    writer = threading.Thread(target=churner)
+    threads = [threading.Thread(target=selector, args=(i,))
+               for i in range(selectors)]
+    writer.start()
+    try:
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join(timeout=120)
+    finally:
+        stop.set()
+        writer.join(timeout=30)
+        srv.close()
+
+    assert errors == []
+    assert len(ok) + len(sheds) == selectors * each
+    st = srv.stats()
+    # every successful select was answered exactly once: warm or inline
+    assert st["batches"] == st["served_warm"] + st["forced_inline"]
+    assert st["batches"] == len(ok)
+    # sheds reconcile with the admission accounting — nothing untyped
+    assert st["shed"] == len(sheds)
+    # the trace actually churned the table: one version bump per delta
+    assert len(churn_updates) > 0
+    assert st["updates"] == 1 + len(churn_updates)
+    assert st["table_version"] == 1 + len(churn_updates)
+    # each selector observed a non-decreasing served version
+    for ix, seq in versions.items():
+        assert all(a <= b for a, b in zip(seq, seq[1:])), f"selector {ix}"
+
+
 # -- lock-order watchdog over the streaming herd (satellite) ---------------
 
 def test_watchdog_instrumented_streaming_herd_obeys_lock_order():
