@@ -25,6 +25,17 @@ warm-up).  Reported as p50/p99 select latency per phase; the
 acceptance gate is streaming p99 within 1.5x of the no-churn baseline
 with zero forced-inline solves after warm-up.
 
+The **lm** suite benchmarks the continuous-batching LM decode engine
+(``launch.serve.DecodeScheduler``) on a reduced config: tokens/sec
+under uniform prompt lengths, mixed prompt lengths (continuous vs an
+emulation of the retired static-lockstep loop — fixed waves, every
+wave decoding to its longest request), and Poisson arrivals streaming
+through ``submit``/``step``.  Throughput counts only *useful* tokens
+(the tokens requests actually asked for), so the static path is
+charged for its padded lockstep steps.  ``--check`` additionally gates
+(a) batch-1-oracle equality of a mixed greedy batch and (b) continuous
+>= static tokens/sec under mixed lengths.
+
 Emits ``BENCH_serve.json`` (machine-readable sweep) next to the CSV
 rows.  The coalescing invariant is checked as it runs: after each
 measured phase every tenant's engine must still report exactly one
@@ -229,8 +240,140 @@ def bench_streaming(*, num_clients: int, cohort_size: int, iters: int,
     return rec
 
 
+def _lm_requests(cfg, count: int, prompt_max: int, gen_max: int, *,
+                 mixed: bool, seed: int) -> list:
+    from repro.launch.serve import Request
+    rng = np.random.default_rng(seed)
+    reqs = []
+    for i in range(count):
+        plen = int(rng.integers(1, prompt_max + 1)) if mixed else prompt_max
+        gen = int(rng.integers(1, gen_max + 1)) if mixed else gen_max
+        reqs.append(Request(i, rng.integers(0, cfg.vocab_size,
+                                            plen).astype(np.int32), gen))
+    return reqs
+
+
+def _clone(reqs) -> list:
+    from repro.launch.serve import Request
+    return [Request(r.uid, r.prompt, r.max_new_tokens) for r in reqs]
+
+
+def _lm_continuous(cfg, reqs, batch: int, max_seq: int, seed: int) -> dict:
+    """Useful tokens/sec through the continuous scheduler (R requests
+    flow through `batch` slots with admit/retire)."""
+    from repro.launch.serve import Server
+    srv = Server(cfg, batch, max_seq, seed=seed)
+    srv.serve_batch(_clone(reqs))                 # jit warm-up pass
+    t0 = time.perf_counter()
+    done = srv.serve_batch(_clone(reqs))
+    dt = time.perf_counter() - t0
+    useful = sum(len(r.generated) for r in done)
+    return {"tok_s": useful / max(dt, 1e-9), "useful_tokens": useful,
+            "wall_s": dt, "decode_steps": srv.stats()["decode_steps"] // 2}
+
+
+def _lm_static(cfg, reqs, batch: int, max_seq: int, seed: int) -> dict:
+    """Emulate the retired lockstep loop: fixed waves of ``batch``
+    requests, every wave decoding for its LONGEST request (short
+    requests ride along producing throwaway tokens), and the next wave
+    blocked until the whole wave finishes.  Only the originally
+    requested tokens count as useful."""
+    from repro.launch.serve import Server
+    srv = Server(cfg, batch, max_seq, seed=seed)
+
+    def one_pass():
+        for i in range(0, len(reqs), batch):
+            wave = reqs[i:i + batch]
+            steps = max(r.max_new_tokens for r in wave)
+            padded = _clone(wave)
+            for r in padded:
+                r.max_new_tokens = steps          # lockstep: all run max
+            srv.serve_batch(padded)
+
+    one_pass()                                    # jit warm-up pass
+    t0 = time.perf_counter()
+    one_pass()
+    dt = time.perf_counter() - t0
+    useful = sum(r.max_new_tokens for r in reqs)
+    return {"tok_s": useful / max(dt, 1e-9), "useful_tokens": useful,
+            "wall_s": dt}
+
+
+def _lm_poisson(cfg, reqs, batch: int, max_seq: int, seed: int,
+                rate_per_s: float) -> dict:
+    """Stream requests through submit/step with Poisson inter-arrival
+    gaps; the scheduler admits each the moment a slot frees up."""
+    from repro.launch.serve import Server
+    srv = Server(cfg, batch, max_seq, seed=seed)
+    srv.serve_batch(_clone(reqs[:batch]))         # jit warm-up pass
+    rng = np.random.default_rng(seed + 17)
+    arrivals = np.cumsum(rng.exponential(1.0 / rate_per_s, len(reqs)))
+    pending = _clone(reqs)
+    done = []
+    i = 0
+    t0 = time.perf_counter()
+    while len(done) < len(reqs):
+        now = time.perf_counter() - t0
+        while i < len(pending) and arrivals[i] <= now:
+            srv.submit(pending[i])
+            i += 1
+        worked = srv.scheduler.step()
+        done.extend(srv.scheduler.completed())
+        if not worked and i < len(pending):
+            time.sleep(max(0.0, arrivals[i] - (time.perf_counter() - t0)))
+    dt = time.perf_counter() - t0
+    useful = sum(len(r.generated) for r in done)
+    return {"tok_s": useful / max(dt, 1e-9), "useful_tokens": useful,
+            "makespan_s": dt, "rate_per_s": rate_per_s}
+
+
+def bench_lm(*, small: bool, seed: int = 0) -> dict:
+    """Continuous-batching LM decode suite on a reduced config."""
+    from repro.configs import get_config
+    from repro.launch.serve import Server
+
+    cfg = get_config("qwen2-7b").reduced()
+    if small:
+        batch, count, prompt_max, gen_max = 2, 6, 12, 8
+    else:
+        batch, count, prompt_max, gen_max = 4, 16, 24, 16
+    max_seq = prompt_max + gen_max                # no truncation either path
+
+    uniform = _lm_requests(cfg, count, prompt_max, gen_max, mixed=False,
+                           seed=seed)
+    mixed = _lm_requests(cfg, count, prompt_max, gen_max, mixed=True,
+                         seed=seed + 1)
+
+    rec = {
+        "suite": "lm_decode", "arch": cfg.name, "reduced": True,
+        "batch": batch, "requests": count, "max_seq": max_seq,
+        "prompt_max": prompt_max, "gen_max": gen_max,
+        "uniform": {"continuous": _lm_continuous(cfg, uniform, batch,
+                                                 max_seq, seed)},
+        "mixed": {"static": _lm_static(cfg, mixed, batch, max_seq, seed),
+                  "continuous": _lm_continuous(cfg, mixed, batch, max_seq,
+                                               seed)},
+        "poisson": _lm_poisson(cfg, mixed, batch, max_seq, seed,
+                               rate_per_s=200.0),
+    }
+    rec["mixed"]["speedup"] = (rec["mixed"]["continuous"]["tok_s"]
+                               / max(rec["mixed"]["static"]["tok_s"], 1e-9))
+
+    # oracle: every mixed greedy continuation == the request decoded alone
+    batched = Server(cfg, batch, max_seq, seed=seed)
+    got = {r.uid: r.generated for r in batched.serve_batch(_clone(mixed))}
+    exact = True
+    for r in mixed:
+        solo = Server(cfg, 1, max_seq, seed=seed)
+        want = solo.serve_batch(_clone([r]))[0].generated
+        exact = exact and got[r.uid] == want
+    rec["oracle_exact"] = exact
+    return rec
+
+
 def run(csv_rows: list, *, num_clients: int = 20_000, cohort_size: int = 64,
-        iters: int = 20, out: str = "BENCH_serve.json") -> list:
+        iters: int = 20, small: bool = False,
+        out: str = "BENCH_serve.json") -> list:
     records = []
     for num_tenants in TENANTS:
         for concurrency in CONCURRENCY:
@@ -268,10 +411,32 @@ def run(csv_rows: list, *, num_clients: int = 20_000, cohort_size: int = 64,
           f"({streaming['p99_ratio_vs_baseline']:.2f}x baseline, "
           f"{streaming['forced_inline_after_warmup']} inline solves "
           f"after warm-up)")
+    lm = bench_lm(small=small)
+    csv_rows.append(("serve/lm/uniform/continuous",
+                     1e6 / lm["uniform"]["continuous"]["tok_s"],
+                     f"tok_s={lm['uniform']['continuous']['tok_s']:.1f}"))
+    csv_rows.append(("serve/lm/mixed/static",
+                     1e6 / lm["mixed"]["static"]["tok_s"],
+                     f"tok_s={lm['mixed']['static']['tok_s']:.1f}"))
+    csv_rows.append(("serve/lm/mixed/continuous",
+                     1e6 / lm["mixed"]["continuous"]["tok_s"],
+                     f"tok_s={lm['mixed']['continuous']['tok_s']:.1f} "
+                     f"speedup={lm['mixed']['speedup']:.2f}x"))
+    csv_rows.append(("serve/lm/poisson/continuous",
+                     1e6 / lm["poisson"]["tok_s"],
+                     f"tok_s={lm['poisson']['tok_s']:.1f}"))
+    print(f"lm decode ({lm['arch']} reduced, batch={lm['batch']}, "
+          f"{lm['requests']} reqs): uniform "
+          f"{lm['uniform']['continuous']['tok_s']:,.1f} tok/s; mixed "
+          f"static {lm['mixed']['static']['tok_s']:,.1f} vs continuous "
+          f"{lm['mixed']['continuous']['tok_s']:,.1f} tok/s "
+          f"({lm['mixed']['speedup']:.2f}x); poisson "
+          f"{lm['poisson']['tok_s']:,.1f} tok/s; oracle_exact="
+          f"{lm['oracle_exact']}")
     with open(out, "w") as fh:
         json.dump({"unit": "selects_per_sec", "records": records,
-                   "streaming": streaming}, fh, indent=2)
-    return records, streaming
+                   "streaming": streaming, "lm_decode": lm}, fh, indent=2)
+    return records, streaming, lm
 
 
 def main() -> int:
@@ -292,9 +457,10 @@ def main() -> int:
         args.clients, args.iters = 2000, 8
 
     rows: list = []
-    records, streaming = run(rows, num_clients=args.clients,
-                             cohort_size=args.cohort_size, iters=args.iters,
-                             out=args.out)
+    records, streaming, lm = run(rows, num_clients=args.clients,
+                                 cohort_size=args.cohort_size,
+                                 iters=args.iters, small=args.small,
+                                 out=args.out)
     if args.check:
         worst = min(r["speedup"] for r in records
                     if r["concurrency"] == max(CONCURRENCY))
@@ -320,6 +486,16 @@ def main() -> int:
         print(f"ok: streaming p99 under churn "
               f"{streaming['p99_ratio_vs_baseline']:.2f}x baseline, "
               f"0 inline solves after warm-up")
+        if not lm["oracle_exact"]:
+            print("FAIL: mixed-length greedy batch diverged from the "
+                  "batch-1 oracle")
+            return 1
+        if lm["mixed"]["speedup"] < 1.0:
+            print(f"FAIL: continuous batching {lm['mixed']['speedup']:.2f}x "
+                  f"static under mixed prompt lengths (expected >= 1.0x)")
+            return 1
+        print(f"ok: lm decode oracle exact; continuous "
+              f"{lm['mixed']['speedup']:.2f}x static under mixed lengths")
     return 0
 
 

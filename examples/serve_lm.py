@@ -1,9 +1,12 @@
-"""Serve a small LM with batched requests (prefill + decode loop).
+"""Serve a small LM through the continuous-batching decode engine.
 
-Exercises the same serve_step the dry-run lowers for decode_32k /
-long_500k, on a CPU-scale model with a batch of concurrent requests.
+Mixed-length requests flow through the DecodeScheduler's slot table —
+admitted via slot-targeted prefill, decoded with per-request cache
+positions, retired mid-decode — on a CPU-scale model.  Pass
+``--requests`` > ``--batch`` to watch the queue drain through the
+slots.
 
-  PYTHONPATH=src python examples/serve_lm.py --batch 4 --gen-len 16
+  PYTHONPATH=src python examples/serve_lm.py --batch 4 --requests 10
 """
 
 import argparse
@@ -23,6 +26,8 @@ def main() -> None:
     ap.add_argument("--gen-len", type=int, default=16)
     ap.add_argument("--temperature", type=float, default=0.7)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--requests", type=int, default=0,
+                    help="total requests (default: one per slot)")
     args = ap.parse_args()
 
     from repro.configs import get_config
@@ -34,13 +39,15 @@ def main() -> None:
     rng = np.random.default_rng(args.seed)
     reqs = [Request(i, rng.integers(0, cfg.vocab_size,
                                     rng.integers(4, args.prompt_len))
-                    .astype(np.int32), args.gen_len)
-            for i in range(args.batch)]
+                    .astype(np.int32), int(rng.integers(1, args.gen_len + 1)))
+            for i in range(args.requests or args.batch)]
     t0 = time.time()
     done = server.serve_batch(reqs)
     dt = time.time() - t0
+    s = server.stats()
     print(f"served {len(done)} requests in {dt:.1f}s "
-          f"({server.last_decode_tok_s:,.1f} decode tok/s)")
+          f"({server.last_decode_tok_s:,.1f} decode tok/s; "
+          f"{s['decode_steps']} decode steps over {s['slots']} slots)")
     for r in done:
         print(f"  req {r.uid} (prompt {len(r.prompt)} toks) -> "
               f"{r.generated[:8]}...")

@@ -18,6 +18,7 @@ first)::
 
     SERVING_LOCK_ORDER = {
         "_registry_lock": 5,    # CohortFrontend tenant registry
+        "_sched_lock": 15,      # DecodeScheduler slot table + queue
         "_select_lock": 20,     # CohortServer single-writer select/draw
         "_solve_lock": 24,      # engine entry: inline + background solves
         "lock": 30,             # _Tenant batch bookkeeping (via seal)
@@ -28,6 +29,11 @@ first)::
         "_admission_lock": 38,  # AdmissionController tokens / depth
         "_stats_lock": 40,      # CohortServer counters (innermost)
     }
+
+``_sched_lock`` is the LM path's scheduler lock (slot table, request
+queue, KV caches in ``launch.serve.DecodeScheduler``); it is disjoint
+from the cohort locks and only ever nests the innermost
+``_stats_lock`` for its dashboard counters.
 
 ``_write_lock`` ranks *after* the select/tenant locks because
 ``snapshot()`` now materializes the pending-delta buffer under it, and
@@ -54,6 +60,7 @@ from typing import Dict, List, Optional
 #: docs/ANALYSIS.md ("Lock discipline") for the derivation.
 SERVING_LOCK_ORDER: Dict[str, int] = {
     "_registry_lock": 5,
+    "_sched_lock": 15,
     "_select_lock": 20,
     "_solve_lock": 24,
     "lock": 30,

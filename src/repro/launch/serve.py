@@ -1,13 +1,21 @@
-"""Serving launchers: the LM server loop and the cohort-selection service.
+"""Serving launchers: the LM decode engine and the cohort-selection service.
 
-``Server`` implements a small production-shaped LM loop: a request
-queue, one prefill step per admitted batch, then token-by-token decode
-with greedy or temperature sampling.  Used by examples/serve_lm.py; the
-decode step is exactly the one the dry-run lowers for decode_32k /
-long_500k.
+``Server`` is a continuous-batching LM server: a
+:class:`DecodeScheduler` owns a **slot table** (one KV-cache slot per
+batch lane, independently resettable) and a request queue.  Finished or
+cache-full requests retire their slot *mid-decode* and the next queued
+request is admitted into it — a slot-targeted prefill
+(``lm_prefill_slot``) fills only that lane — so the decode jit keeps
+running at full batch width with per-slot active masking.  Decode runs
+with **per-request cache positions**: row i writes its token's KV at
+its own ``pos[i]`` and attends only ``[0, pos[i]]``, which makes
+heterogeneous prompt lengths *exact* — each request's continuation is
+bit-identical to decoding it alone (pad and stale-slot KV can never
+leak).  ``serve_batch`` survives as a thin wrapper (submit + drain);
+the decode step is exactly the one the dry-run lowers for decode_32k.
 
   PYTHONPATH=src python -m repro.launch.serve --arch gemma-2b --reduced \
-      --batch 4 --prompt-len 32 --gen-len 32
+      --batch 4 --prompt-len 32 --gen-len 32 --requests 12 --mixed
 
 ``CohortServer`` is the federated control-plane counterpart: it owns the
 live client-embedding table (versioned, copy-on-write, so embedding
@@ -40,12 +48,16 @@ concurrent same-version requests behind one engine solve
 from __future__ import annotations
 
 import argparse
+import collections
 import dataclasses
 import threading
 import time
-from typing import List, Optional
+from typing import Deque, List, Optional
 
 import numpy as np
+
+#: smoothing factor for the decode tokens/sec EMA in DecodeScheduler.stats().
+_TOK_S_EMA = 0.2
 
 
 @dataclasses.dataclass
@@ -56,11 +68,266 @@ class Request:
     generated: Optional[List[int]] = None
 
 
+class DecodeScheduler:
+    """Continuous-batching decode engine: slot table + request queue.
+
+    One KV-cache **slot** per batch lane (``repro.models.transformer
+    .init_lm_cache`` — leaves stacked ``(repeats, batch, ...)``, batch
+    axis = slot table).  The loop per :meth:`step`:
+
+    1. **admit** — every free slot pops the queue: the new request's
+       prompt is prefilled *into that slot only*
+       (``lm_prefill_slot`` zeroes the lane and fills it; other slots
+       keep decoding state untouched), its first token is sampled from
+       its own last-prompt-position logits, and the slot's cache
+       position starts at the true (unpadded) prompt length.
+    2. **decode** — ONE jitted ``lm_decode_step`` over the full batch
+       with per-request positions: row i writes at ``pos[i]`` and
+       attends ``[0, pos[i]]``, so pad/stale-slot KV cannot leak and
+       mixed-length continuations are exact.  Empty slots ride along
+       masked-inactive (their logits are discarded and they generate
+       nothing — no wasted "filler" steps are ever accounted).
+    3. **retire** — requests that produced ``max_new_tokens`` tokens
+       (or filled the cache: ``truncated``) free their slot mid-decode
+       for the next admit.
+
+    Sampling is vectorized: greedy argmax, or Gumbel-max for
+    temperature sampling (``argmax(logits/T + Gumbel)`` is one exact
+    softmax draw per row — no per-row Python ``rng.choice`` loop).
+    Everything is deterministic under a fixed seed.
+
+    Prompts are right-padded to a multiple of ``prefill_bucket`` to
+    bound jit retraces (one per distinct padded length).  Bucketing
+    never changes results: the first token is sampled at the true last
+    prompt position (causal attention — pad cannot leak backwards) and
+    every padded KV entry is overwritten by the real decode write at
+    that position before the mask ever exposes it.
+
+    Thread-safe: ``submit`` may race ``step``/``drain`` from another
+    thread.  ``_sched_lock`` (slot table + queue) and ``_stats_lock``
+    (counters, innermost) are ranked in
+    ``repro.analysis.watchdog.SERVING_LOCK_ORDER``.
+    """
+
+    def __init__(self, cfg, params, batch: int, max_seq: int, *,
+                 seed: int = 0, temperature: float = 0.0,
+                 prefill_bucket: int = 8):
+        import jax
+        from repro.models import transformer as T
+
+        self.cfg = cfg
+        self.params = params
+        self.batch = batch
+        self.max_seq = max_seq
+        self.temperature = temperature
+        self.prefill_bucket = max(1, int(prefill_bucket))
+        self._rng = np.random.default_rng(seed)
+        self._prefill_slot = jax.jit(
+            lambda p, t, c, slot, last: T.lm_prefill_slot(
+                p, cfg, {"tokens": t}, c, slot, last_pos=last))
+        self._decode = jax.jit(
+            lambda p, t, c, pos: T.lm_decode_step(p, cfg, t, c, pos))
+
+        # slot table + queue (one writer at a time under _sched_lock;
+        # _stats_lock is the innermost leaf for dashboard counters)
+        self._sched_lock = threading.Lock()
+        self._stats_lock = threading.Lock()
+        self.caches = T.init_lm_cache(cfg, batch, max_seq)  # guarded-by: _sched_lock
+        self._reqs: List[Optional[Request]] = [None] * batch  # guarded-by: _sched_lock
+        self._pos = np.zeros(batch, np.int32)       # guarded-by: _sched_lock
+        self._tok = np.zeros(batch, np.int32)       # guarded-by: _sched_lock
+        self._need = np.zeros(batch, np.int64)      # guarded-by: _sched_lock
+        self._queue: Deque[Request] = collections.deque()  # guarded-by: _sched_lock
+        self._completed: List[Request] = []         # guarded-by: _sched_lock
+        self._counters = {  # guarded-by: _stats_lock
+            "admitted": 0, "retired": 0, "truncated": 0, "prefills": 0,
+            "decode_steps": 0, "decode_tokens": 0, "tokens_generated": 0}
+        self._decode_seconds = 0.0                  # guarded-by: _stats_lock
+        self._tok_s_ema = 0.0                       # guarded-by: _stats_lock
+
+    # -- sampling ---------------------------------------------------------
+    def _sample(self, logits: np.ndarray) -> np.ndarray:
+        """Greedy argmax, or one vectorized Gumbel-max softmax draw per
+        row (identical in distribution to ``rng.choice(p=softmax)``)."""
+        if self.temperature <= 0:
+            return np.argmax(logits, axis=-1).astype(np.int32)
+        z = logits / self.temperature
+        g = self._rng.gumbel(size=z.shape)
+        return np.argmax(z + g, axis=-1).astype(np.int32)
+
+    # -- request intake ---------------------------------------------------
+    def submit(self, request: Request) -> None:
+        """Enqueue one request; it is admitted when a slot frees up."""
+        plen = len(request.prompt)
+        if plen < 1:
+            raise ValueError(f"request {request.uid}: empty prompt")
+        if plen > self.max_seq:
+            raise ValueError(
+                f"request {request.uid}: prompt length {plen} exceeds "
+                f"max_seq {self.max_seq}")
+        with self._sched_lock:
+            self._queue.append(request)
+
+    # -- scheduler core ---------------------------------------------------
+    def step(self) -> bool:
+        """One scheduler tick: admit, decode once, retire.
+
+        Admission pops the queue into every free slot (a request with
+        ``max_new_tokens <= 0`` completes immediately without touching a
+        slot — no filler decode steps, no skewed timing); decode runs
+        ONE jitted step over the full batch with inactive slots masked;
+        finished or cache-full requests retire their slot mid-decode.
+        Returns False only when the engine is fully idle (no queued
+        requests, no active slots) — the drain-loop termination signal.
+        """
+        import jax.numpy as jnp
+
+        with self._sched_lock:
+            # -- admit -------------------------------------------------
+            worked = False
+            for i in range(self.batch):
+                if self._reqs[i] is not None:
+                    continue
+                if not self._queue:
+                    break
+                req = self._queue.popleft()
+                worked = True
+                req.generated = []
+                if req.max_new_tokens <= 0:
+                    self._completed.append(req)
+                    with self._stats_lock:
+                        self._counters["retired"] += 1
+                    continue
+                plen = len(req.prompt)
+                bucket = self.prefill_bucket
+                padded = min(self.max_seq, -(-plen // bucket) * bucket)
+                toks = np.zeros((1, padded), np.int32)
+                toks[0, :plen] = req.prompt
+                logits, self.caches = self._prefill_slot(
+                    self.params, jnp.asarray(toks), self.caches,
+                    jnp.int32(i), jnp.asarray([plen - 1], np.int32))
+                first = int(self._sample(np.asarray(logits))[0])
+                req.generated.append(first)
+                # done at admit: single-token request, or no cache room
+                # left to write the first token's KV for further decode
+                done_now = req.max_new_tokens == 1 or plen >= self.max_seq
+                with self._stats_lock:
+                    self._counters["admitted"] += 1
+                    self._counters["prefills"] += 1
+                    self._counters["tokens_generated"] += 1
+                    if done_now:
+                        self._counters["retired"] += 1
+                        if req.max_new_tokens > 1:
+                            self._counters["truncated"] += 1
+                if done_now:
+                    self._completed.append(req)
+                    continue
+                self._reqs[i] = req
+                self._pos[i] = plen
+                self._tok[i] = first
+                self._need[i] = req.max_new_tokens - 1
+
+            # -- decode ------------------------------------------------
+            active = np.flatnonzero(self._need > 0)
+            if active.size == 0:
+                return worked
+            t0 = time.perf_counter()
+            logits, self.caches = self._decode(
+                self.params, jnp.asarray(self._tok[:, None]), self.caches,
+                jnp.asarray(self._pos))
+            nxt = self._sample(np.asarray(logits))
+            dt = time.perf_counter() - t0
+
+            # -- retire ------------------------------------------------
+            retired = truncated = 0
+            for i in active:
+                req = self._reqs[i]
+                req.generated.append(int(nxt[i]))
+                self._tok[i] = nxt[i]
+                self._pos[i] += 1
+                self._need[i] -= 1
+                if self._need[i] <= 0:
+                    self._reqs[i] = None
+                    self._need[i] = 0
+                    self._completed.append(req)
+                    retired += 1
+                elif self._pos[i] >= self.max_seq:
+                    # cache full: retire mid-decode with what we have
+                    self._reqs[i] = None
+                    self._need[i] = 0
+                    self._completed.append(req)
+                    retired += 1
+                    truncated += 1
+            with self._stats_lock:
+                # count only REAL generated tokens — inactive/filler
+                # slots produce nothing (the old lockstep loop divided
+                # batch*steps by wall time and over-counted)
+                self._counters["retired"] += retired
+                self._counters["truncated"] += truncated
+                self._counters["decode_steps"] += 1
+                self._counters["decode_tokens"] += int(active.size)
+                self._counters["tokens_generated"] += int(active.size)
+                self._decode_seconds += dt
+                rate = active.size / max(dt, 1e-9)
+                self._tok_s_ema = (
+                    rate if self._counters["decode_steps"] == 1
+                    else self._tok_s_ema
+                    + _TOK_S_EMA * (rate - self._tok_s_ema))
+        return True
+
+    def completed(self) -> List[Request]:
+        """Harvest requests finished so far without driving the engine
+        (streaming callers interleave this with :meth:`step`)."""
+        with self._sched_lock:
+            done, self._completed = self._completed, []
+        return done
+
+    def drain(self) -> List[Request]:
+        """Run the scheduler until idle; return newly completed requests."""
+        while self.step():
+            pass
+        return self.completed()
+
+    # -- observability ----------------------------------------------------
+    def stats(self) -> dict:
+        """Serving dashboard: slot occupancy, queue depth, counters.
+
+        ``admitted`` / ``retired`` / ``truncated`` count requests
+        (truncated = retired early because the slot's cache filled);
+        ``decode_tokens`` counts only tokens actually generated by
+        decode steps (inactive slots contribute nothing);
+        ``tokens_generated`` additionally includes each request's first
+        token, sampled at prefill; ``tok_s_ema`` smooths the per-step
+        decode rate with factor ``_TOK_S_EMA``.
+        """
+        with self._sched_lock:
+            occupied = sum(r is not None for r in self._reqs)
+            queue_depth = len(self._queue)
+            with self._stats_lock:
+                counters = dict(self._counters)
+                decode_seconds = self._decode_seconds
+                tok_s_ema = self._tok_s_ema
+        return {
+            **counters,
+            "slots": self.batch,
+            "occupied": occupied,
+            "queue_depth": queue_depth,
+            "decode_seconds": decode_seconds,
+            "tok_s_ema": tok_s_ema,
+        }
+
+
 class Server:
-    """Batched static-shape server (prefill once, decode step-by-step)."""
+    """Continuous-batching LM server over a :class:`DecodeScheduler`.
+
+    ``serve_batch`` is the compatibility wrapper around the scheduler:
+    submit every request, drain, return them (mutated in place, original
+    order).  For streaming workloads use :meth:`submit` /
+    :meth:`DecodeScheduler.step` / :meth:`drain` directly.
+    """
 
     def __init__(self, cfg, batch: int, max_seq: int, *, seed: int = 0,
-                 temperature: float = 0.0):
+                 temperature: float = 0.0, prefill_bucket: int = 8):
         import jax
         from repro.models import transformer as T
 
@@ -68,74 +335,43 @@ class Server:
         self.batch = batch
         self.max_seq = max_seq
         self.temperature = temperature
-        key = jax.random.PRNGKey(seed)
-        self.params = T.init_lm(key, cfg)
-        self._prefill = jax.jit(
-            lambda p, b, c, last: T.lm_prefill(p, cfg, b, c, last_pos=last))
-        self._decode = jax.jit(
-            lambda p, t, c, pos: T.lm_decode_step(p, cfg, t, c, pos))
-        self._rng = np.random.default_rng(seed)
+        self.params = T.init_lm(jax.random.PRNGKey(seed), cfg)
+        self.scheduler = DecodeScheduler(
+            cfg, self.params, batch, max_seq, seed=seed,
+            temperature=temperature, prefill_bucket=prefill_bucket)
+        self.last_decode_tok_s = 0.0
 
-    def _sample(self, logits: np.ndarray) -> np.ndarray:
-        if self.temperature <= 0:
-            return np.argmax(logits, axis=-1).astype(np.int32)
-        z = logits / self.temperature
-        z = z - z.max(axis=-1, keepdims=True)
-        p = np.exp(z)
-        p /= p.sum(axis=-1, keepdims=True)
-        return np.array([self._rng.choice(len(row), p=row) for row in p],
-                        np.int32)
+    def submit(self, request: Request) -> None:
+        self.scheduler.submit(request)
+
+    def drain(self) -> List[Request]:
+        return self.scheduler.drain()
+
+    def stats(self) -> dict:
+        """Scheduler stats plus the last ``serve_batch`` decode rate."""
+        return {**self.scheduler.stats(),
+                "last_decode_tok_s": self.last_decode_tok_s}
 
     def serve_batch(self, requests: List[Request]) -> List[Request]:
-        """Prefill + decode one admitted batch (static shapes).
+        """Serve ``requests`` to completion (any count — the queue admits
+        them as slots free up) and return them in the original order.
 
-        Heterogeneous prompt lengths are right-padded to the batch
-        maximum; each request's FIRST token is sampled from the logits
-        at its own last prompt position (causal attention guarantees
-        those are pad-free).  Known limitation: decode is still
-        batch-static — a shorter prompt's later tokens are written at
-        the padded positions and its decode steps can attend to the pad
-        KV-cache entries, so continuations beyond the first token are
-        approximate under mixed lengths (see ROADMAP: per-request decode
-        positions + pad masking).
+        ``last_decode_tok_s`` counts only real generated tokens over
+        the decode wall time of this call — short or absent requests no
+        longer inflate the rate, and partial batches run no filler
+        decode steps at all.
         """
-        import jax.numpy as jnp
-        from repro.models import transformer as T
-
-        assert len(requests) <= self.batch
-        if not requests:                  # nothing to pad the batch from
+        if not requests:
             return []
-        while len(requests) < self.batch:                  # pad the batch
-            requests = requests + [Request(-1, requests[0].prompt, 0)]
-        plen = max(len(r.prompt) for r in requests)
-        toks = np.zeros((self.batch, plen), np.int32)
-        for i, r in enumerate(requests):
-            toks[i, : len(r.prompt)] = r.prompt
-        # per-request prompt-end positions: a shorter prompt's first
-        # token must be sampled from its own last-token logits, not the
-        # padded batch length (which conditions on the pad zeros)
-        last_pos = np.array([len(r.prompt) - 1 for r in requests], np.int32)
-
-        caches = T.init_lm_cache(self.cfg, self.batch, self.max_seq)
-        logits, caches = self._prefill(self.params, {"tokens": jnp.asarray(toks)},
-                                       caches, jnp.asarray(last_pos))
-        out = [[] for _ in requests]
-        tok = self._sample(np.asarray(logits))
-        steps = max(r.max_new_tokens for r in requests)
-        t0 = time.time()
-        for s in range(steps):
-            for i, r in enumerate(requests):
-                if s < r.max_new_tokens:
-                    out[i].append(int(tok[i]))
-            logits, caches = self._decode(self.params,
-                                          jnp.asarray(tok[:, None]),
-                                          caches, jnp.int32(plen + s))
-            tok = self._sample(np.asarray(logits))
-        dt = time.time() - t0
-        self.last_decode_tok_s = self.batch * steps / max(dt, 1e-9)
-        for r, gen in zip(requests, out):
-            r.generated = gen
-        return [r for r in requests if r.uid >= 0]
+        before = self.scheduler.stats()
+        for req in requests:
+            self.scheduler.submit(req)
+        self.scheduler.drain()
+        after = self.scheduler.stats()
+        toks = after["decode_tokens"] - before["decode_tokens"]
+        secs = after["decode_seconds"] - before["decode_seconds"]
+        self.last_decode_tok_s = toks / max(secs, 1e-9)
+        return list(requests)
 
 
 #: smoothing factor for the server's per-phase latency EMAs.
@@ -852,6 +1088,13 @@ def main() -> None:
     ap.add_argument("--gen-len", type=int, default=32)
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--requests", type=int, default=0, metavar="R",
+                    help="total LM requests to serve (default: one per "
+                         "batch slot); R > batch exercises the "
+                         "admit/retire scheduler")
+    ap.add_argument("--mixed", action="store_true",
+                    help="draw mixed prompt/generation lengths instead "
+                         "of uniform --prompt-len/--gen-len")
     ap.add_argument("--cohort", type=int, default=0, metavar="N",
                     help="serve cohort selection for N clients instead "
                          "of the LM loop")
@@ -902,14 +1145,26 @@ def main() -> None:
     rng = np.random.default_rng(args.seed)
     server = Server(cfg, args.batch, args.prompt_len + args.gen_len,
                     temperature=args.temperature, seed=args.seed)
-    reqs = [Request(i, rng.integers(0, cfg.vocab_size,
-                                    args.prompt_len).astype(np.int32),
-                    args.gen_len)
-            for i in range(args.batch)]
+    n_reqs = args.requests or args.batch
+    reqs = []
+    for i in range(n_reqs):
+        if args.mixed:
+            plen = int(rng.integers(1, args.prompt_len + 1))
+            gen = int(rng.integers(1, args.gen_len + 1))
+        else:
+            plen, gen = args.prompt_len, args.gen_len
+        reqs.append(Request(i, rng.integers(0, cfg.vocab_size,
+                                            plen).astype(np.int32), gen))
     t0 = time.time()
     done = server.serve_batch(reqs)
+    stats = server.stats()
     print(f"served {len(done)} requests in {time.time()-t0:.1f}s "
           f"({server.last_decode_tok_s:,.1f} decode tok/s)")
+    print(f"scheduler: admitted={stats['admitted']} "
+          f"retired={stats['retired']} truncated={stats['truncated']} "
+          f"decode_steps={stats['decode_steps']} "
+          f"decode_tokens={stats['decode_tokens']} "
+          f"tok_s_ema={stats['tok_s_ema']:,.1f}")
     for r in done[:2]:
         print(f"req {r.uid}: first 10 generated tokens {r.generated[:10]}")
 

@@ -320,8 +320,21 @@ def build_step(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh,
     tok_shard = NamedSharding(mesh, batch_pspec(mesh, 2, 0,
                                                 shape.global_batch))
     fn = make_decode_step(cfg, shape)
-    args = (p_specs, c_specs, tok, _sds((), jnp.int32))
-    in_sh = (p_shard, c_shard, tok_shard, repl)
+    # Continuous-batching serving decodes with per-request cache
+    # positions (B,) so every row masks its own [0, pos[i]] prefix.
+    # Encoder-decoder and windowed long-context decode keep the scalar
+    # lockstep position: encdec decode has no slot table, and the H3
+    # windowed cache-slice optimisation needs a scalar slice start
+    # (long_500k is batch=1, so nothing is lost).
+    if cfg.is_encoder_decoder or decode_window(cfg, shape) is not None:
+        pos_spec = _sds((), jnp.int32)
+        pos_shard = repl
+    else:
+        pos_spec = _sds((shape.global_batch,), jnp.int32)
+        pos_shard = NamedSharding(mesh, batch_pspec(mesh, 1, 0,
+                                                    shape.global_batch))
+    args = (p_specs, c_specs, tok, pos_spec)
+    in_sh = (p_shard, c_shard, tok_shard, pos_shard)
     out_sh = (None, c_shard)
     # H10 (REFUTED on CPU backend — see train bundle note): cache donation
     # is the production setting on TPU; measured OFF here.

@@ -10,7 +10,13 @@ Modes
 -----
 * full   : (B, S, d) -> (B, S, d), causal (or bidirectional) mask.
 * decode : (B, 1, d) + cache {k,v: (B, S_max, K, hd)} -> one-step output
-           and the updated cache.  ``cache_pos`` is the write position.
+           and the updated cache.  ``cache_pos`` is the write position —
+           a scalar (lockstep batch: every row writes at the same
+           position) or a per-request ``(B,)`` vector (continuous
+           batching: row i writes at ``cache_pos[i]`` and its causal
+           mask confines reads to ``[0, cache_pos[i]]``, so pad or
+           stale slot entries can never leak into another request's
+           continuation).
 
 The pure-jnp path below is the oracle; ``kernels/flash_attention_pallas.py``
 provides the TPU Pallas kernel validated against it (flip with
@@ -224,16 +230,33 @@ def attention(p, x, cfg, *, positions, causal=True, window=None,
 
     new_cache = None
     if cache is not None and not cross:
-        # write this step's (or this prefill block's) k/v into the cache.
-        k_c = jax.lax.dynamic_update_slice_in_dim(
-            cache["k"], k.astype(cache["k"].dtype), cache_pos, axis=1)
-        v_c = jax.lax.dynamic_update_slice_in_dim(
-            cache["v"], v.astype(cache["v"].dtype), cache_pos, axis=1)
+        per_row = jnp.ndim(cache_pos) == 1
+        if per_row and S != 1:
+            raise ValueError(
+                "per-request cache_pos requires S == 1 (decode); "
+                "slot-targeted prefill goes through lm_prefill_slot")
+        if per_row:
+            # continuous-batching decode: each row writes its token's
+            # k/v at its OWN position (S must be 1 — per-row prefill
+            # goes through the slot-targeted path in transformer.py)
+            rows = jnp.arange(B)
+            k_c = cache["k"].at[rows, jnp.asarray(cache_pos)].set(
+                k[:, 0].astype(cache["k"].dtype))
+            v_c = cache["v"].at[rows, jnp.asarray(cache_pos)].set(
+                v[:, 0].astype(cache["v"].dtype))
+        else:
+            # write this step's (or this prefill block's) k/v into the
+            # cache at the shared position.
+            k_c = jax.lax.dynamic_update_slice_in_dim(
+                cache["k"], k.astype(cache["k"].dtype), cache_pos, axis=1)
+            v_c = jax.lax.dynamic_update_slice_in_dim(
+                cache["v"], v.astype(cache["v"].dtype), cache_pos, axis=1)
         new_cache = {"k": k_c, "v": v_c}
         k, v = k_c, v_c
         k_positions = jnp.arange(k.shape[1])
         causal = True
-        if window is not None and S == 1 and k.shape[1] > 2 * window:
+        if window is not None and S == 1 and not per_row \
+                and k.shape[1] > 2 * window:
             # H3 (§Perf): windowed long-context decode reads only the live
             # window of the cache instead of masking the full 500k entries
             # — cuts executed attention FLOPs and cache HBM reads by
@@ -256,6 +279,10 @@ def attention(p, x, cfg, *, positions, causal=True, window=None,
 
     q_pos1d = positions if positions.ndim == 1 else positions[0]
     k_pos1d = k_positions if k_positions.ndim == 1 else k_positions[0]
+    # per-request positions: keep the (B, S) shape so every row masks
+    # against its own write position (the (1, S) squeeze below would
+    # silently share row 0's mask across the batch)
+    q_pos2d = positions if positions.ndim == 2 else q_pos1d[None]
 
     if S >= BLOCKED_ATTN_THRESHOLD:
         out = blocked_attention(
@@ -263,7 +290,7 @@ def attention(p, x, cfg, *, positions, causal=True, window=None,
             softcap=cfg.logit_softcap, q_positions=q_pos1d,
             k_positions=k_pos1d)
     else:
-        mask = make_mask(q_pos1d[None], k_pos1d[None], causal=causal,
+        mask = make_mask(q_pos2d, k_pos1d[None], causal=causal,
                          window=window if causal else None)
         scores = _gqa_scores(q, k) / np.sqrt(cfg.head_dim)
         if cfg.logit_softcap:

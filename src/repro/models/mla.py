@@ -101,12 +101,30 @@ def mla_attention(p, x, cfg, *, positions, window=None, cache=None,
 
     new_cache = None
     if cache is not None:
-        ckv_c = jax.lax.dynamic_update_slice_in_dim(
-            cache["ckv"], ckv.astype(cache["ckv"].dtype), cache_pos, axis=1)
-        kr_c = jax.lax.dynamic_update_slice_in_dim(
-            cache["krope"], k_rope.astype(cache["krope"].dtype), cache_pos, axis=1)
+        per_row = jnp.ndim(cache_pos) == 1
+        if per_row and S != 1:
+            raise ValueError(
+                "per-request cache_pos requires S == 1 (decode); "
+                "slot-targeted prefill goes through lm_prefill_slot")
+        if per_row:
+            # continuous-batching decode: row i writes its latent at its
+            # own position; the per-row causal mask below confines reads
+            # to [0, cache_pos[i]] so stale slot entries never leak.
+            rows = jnp.arange(B)
+            ckv_c = cache["ckv"].at[rows, jnp.asarray(cache_pos)].set(
+                ckv[:, 0].astype(cache["ckv"].dtype))
+            kr_c = cache["krope"].at[rows, jnp.asarray(cache_pos)].set(
+                k_rope[:, 0].astype(cache["krope"].dtype))
+        else:
+            ckv_c = jax.lax.dynamic_update_slice_in_dim(
+                cache["ckv"], ckv.astype(cache["ckv"].dtype), cache_pos,
+                axis=1)
+            kr_c = jax.lax.dynamic_update_slice_in_dim(
+                cache["krope"], k_rope.astype(cache["krope"].dtype),
+                cache_pos, axis=1)
         new_cache = {"ckv": ckv_c, "krope": kr_c}
-        if window is not None and S == 1 and ckv_c.shape[1] > 2 * window:
+        if window is not None and S == 1 and not per_row \
+                and ckv_c.shape[1] > 2 * window:
             # H3 (§Perf): windowed decode against the live cache slice only.
             start = jnp.clip(cache_pos - window + 1, 0,
                              ckv_c.shape[1] - window)

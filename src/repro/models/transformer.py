@@ -173,6 +173,17 @@ def init_lm(key, cfg):
 
 
 def init_lm_cache(cfg, batch: int, max_seq: int, dtype=None):
+    """Decode caches for ``batch`` independent request **slots**.
+
+    Every cache leaf is stacked ``(repeats, batch, ...)``, so the batch
+    axis (axis 1) is a slot table: slot ``i`` holds request ``i``'s KV
+    rows (or SSM state) and nothing else.  Slots are independently
+    resettable/re-fillable — :func:`lm_prefill_slot` zeroes one slot
+    and prefills a new prompt into it without touching the others,
+    which is what lets the continuous-batching scheduler
+    (``repro.launch.serve.DecodeScheduler``) admit and retire requests
+    mid-decode against one live cache tree.
+    """
     caches = []
     for repeats, types in build_plan(cfg):
         blocks = []
@@ -182,6 +193,27 @@ def init_lm_cache(cfg, batch: int, max_seq: int, dtype=None):
                 lambda x: jnp.broadcast_to(x, (repeats, *x.shape)), one))
         caches.append({"blocks": tuple(blocks)})
     return caches
+
+
+def cache_slot(caches, slot, width: int = 1):
+    """Slice ``width`` slots starting at ``slot`` out of a cache tree.
+
+    Cache leaves are ``(repeats, batch, ...)`` (see
+    :func:`init_lm_cache`); this returns the same tree with batch axis
+    ``width`` — a standalone cache for those slots.  ``slot`` may be a
+    traced scalar, so the slice lowers inside jit.
+    """
+    return jax.tree.map(
+        lambda x: jax.lax.dynamic_slice_in_dim(x, slot, width, axis=1),
+        caches)
+
+
+def write_cache_slot(caches, slot_caches, slot):
+    """Write a width-w cache tree back into slots ``[slot, slot+w)``."""
+    return jax.tree.map(
+        lambda full, part: jax.lax.dynamic_update_slice_in_dim(
+            full, part.astype(full.dtype), slot, axis=1),
+        caches, slot_caches)
 
 
 def lm_hidden(params, cfg, h, *, positions, window=None, caches=None,
@@ -366,11 +398,37 @@ def lm_prefill(params, cfg, batch, caches, *, window=None, last_pos=None):
     return logits[:, 0], caches
 
 
+def lm_prefill_slot(params, cfg, batch, caches, slot, *, window=None,
+                    last_pos=None):
+    """Prefill ONE slot of a slotted cache tree; others untouched.
+
+    ``batch`` holds a single request (leading axis 1); its prompt KV /
+    SSM state is computed against a **zeroed** width-1 cache — stale
+    conv/SSM state from the slot's previous tenant must not seed the
+    new recurrence — and written back into slot ``slot``.  Returns
+    ``(logits (1, V), updated full caches)``.  ``slot`` may be traced,
+    so one jit covers every slot; retraces happen only per distinct
+    prompt length (bucket prompts to bound them).
+    """
+    sub = jax.tree.map(jnp.zeros_like, cache_slot(caches, slot))
+    logits, sub = lm_prefill(params, cfg, batch, sub, window=window,
+                             last_pos=last_pos)
+    return logits, write_cache_slot(caches, sub, slot)
+
+
 def lm_decode_step(params, cfg, token, caches, pos, *, window=None):
-    """One decode step.  token: (B,1) int32, pos: scalar int32.
+    """One decode step.  token: (B,1) int32; pos: scalar int32 (lockstep
+    batch — every row reads/writes the same cache position) or (B,)
+    int32 (continuous batching — row i writes at ``pos[i]`` and attends
+    only ``[0, pos[i]]``, so a shorter request's continuation can never
+    see pad KV or a reused slot's stale entries).
     Returns (logits (B,V), new caches)."""
     h = embed_inputs(params, cfg, token)
-    positions = pos + jnp.arange(1)
+    pos = jnp.asarray(pos)
+    if pos.ndim == 0:
+        positions = pos + jnp.arange(1)
+    else:
+        positions = pos[:, None]                           # (B, 1) per-row
     h, caches, _ = lm_hidden(params, cfg, h, positions=positions,
                              window=window, caches=caches, cache_pos=pos)
     logits = lm_logits(params, cfg, h)
