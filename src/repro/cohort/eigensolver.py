@@ -31,11 +31,20 @@ import jax.numpy as jnp
 _EPS = 1e-12
 
 
-def _blocked_matmul(w, q, block_rows: int):
-    """(m, m) @ (m, r) evaluated in row panels of w."""
+def _blocked_matmul(w, q, block_rows: int, use_pallas: bool = False):
+    """(m, m) @ (m, r) evaluated in row panels of w.
+
+    ``use_pallas=True`` runs the panel loop inside one fused Pallas
+    kernel (``kernels/nystrom_pallas.panel_matmul_pallas``) instead of
+    round-tripping each panel through a separate XLA dispatch; the per-
+    panel dots are identical, so the two routes agree bitwise.
+    """
     m = w.shape[0]
     if block_rows >= m:
         return w @ q
+    if use_pallas:
+        from repro.kernels import ops as kernel_ops
+        return kernel_ops.panel_matmul(w, q, block_rows=block_rows)
     pad = (-m) % block_rows
     wp = jnp.pad(w, ((0, pad), (0, 0)))
     panels = wp.reshape(-1, block_rows, m)
@@ -49,9 +58,10 @@ def _panel_qr(v):
     return q
 
 
-@functools.partial(jax.jit, static_argnames=("r", "iters", "block_rows"))
+@functools.partial(jax.jit, static_argnames=("r", "iters", "block_rows",
+                                             "use_pallas"))
 def subspace_topk(w, r: int, *, iters: int = 30, q0=None, key=None,
-                  block_rows: int = 2048):
+                  block_rows: int = 2048, use_pallas: bool = False):
     """Top-r eigenpairs of symmetric PSD ``w`` via blocked subspace iteration.
 
     Returns ``(evals, evecs)`` with eigenvalues in DESCENDING order,
@@ -70,11 +80,11 @@ def subspace_topk(w, r: int, *, iters: int = 30, q0=None, key=None,
     q = _panel_qr(q0.astype(w.dtype))
 
     def body(_, q):
-        return _panel_qr(_blocked_matmul(w, q, block_rows))
+        return _panel_qr(_blocked_matmul(w, q, block_rows, use_pallas))
 
     q = jax.lax.fori_loop(0, iters, body, q)
     # Rayleigh-Ritz rotation onto the eigenbasis of the restriction
-    t = q.T @ _blocked_matmul(w, q, block_rows)
+    t = q.T @ _blocked_matmul(w, q, block_rows, use_pallas)
     t = 0.5 * (t + t.T)
     evals, u = jnp.linalg.eigh(t)                 # ascending
     order = jnp.arange(r)[::-1]
@@ -82,19 +92,22 @@ def subspace_topk(w, r: int, *, iters: int = 30, q0=None, key=None,
 
 
 def topk_eigh(w, r: int, *, solver: str = "eigh", iters: int = 30,
-              q0=None, key=None, block_rows: int = 2048):
+              q0=None, key=None, block_rows: int = 2048,
+              use_pallas: bool = False):
     """Top-r eigenpairs of symmetric PSD ``w``, descending eigenvalues.
 
     ``solver="eigh"`` — exact dense path (use for m ≲ 2048).
     ``solver="subspace"`` — blocked subspace iteration (see module doc);
     the only path viable at m ≥ 10⁴ and the only one that warm-starts.
+    ``use_pallas`` routes the subspace row-panel matmuls through the
+    fused Pallas kernel (no effect on the dense path).
     """
     if solver == "eigh":
         ew, uw = jnp.linalg.eigh(w)               # ascending
         return ew[::-1][:r], uw[:, ::-1][:, :r]
     if solver == "subspace":
         return subspace_topk(w, r, iters=iters, q0=q0, key=key,
-                             block_rows=block_rows)
+                             block_rows=block_rows, use_pallas=use_pallas)
     raise ValueError(f"unknown solver {solver!r}")
 
 

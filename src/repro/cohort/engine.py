@@ -94,7 +94,15 @@ class CohortConfig:
     eigh_cutoff      — "auto" solver: largest m factored with dense eigh.
     w_rank           — rank of the blocked W^{-1/2} (default max(8k, 64)).
     block_rows       — row-panel height inside the blocked eigensolver.
-    use_pallas       — route affinity kernels through Pallas.
+    use_pallas       — route the landmark paths through the streaming
+                       fused Pallas pipeline (the (N, m) cross-affinity
+                       is never materialized) and the dense path's
+                       affinity kernels through Pallas.
+    affinity_dtype   — "f32" | "bf16" | "int8": tile precision of the
+                       fused affinity passes (per-row quantization
+                       scales, f32/int32 MXU accumulation).  Non-f32
+                       requires use_pallas=True — the jnp reference
+                       path is the exact f32 oracle.
     """
     num_clusters: int = 8
     method: str = "auto"
@@ -112,8 +120,18 @@ class CohortConfig:
     w_rank: Optional[int] = None
     block_rows: int = 2048
     use_pallas: bool = False
+    affinity_dtype: str = "f32"
 
     def __post_init__(self):
+        if self.affinity_dtype not in ("f32", "bf16", "int8"):
+            raise ValueError(
+                f"unknown affinity_dtype {self.affinity_dtype!r}; "
+                f"expected one of ('f32', 'bf16', 'int8')")
+        if self.affinity_dtype != "f32" and not self.use_pallas:
+            raise ValueError(
+                f"affinity_dtype={self.affinity_dtype!r} requires "
+                f"use_pallas=True (quantized tiles only exist in the "
+                f"fused Pallas pipeline)")
         if self.method not in _METHODS:
             raise ValueError(f"unknown method {self.method!r}; "
                              f"expected one of {_METHODS}")
@@ -543,12 +561,18 @@ class CohortEngine:
             w_q0=jnp.asarray(st.w_basis) if warm_basis else None,
             mm_q0=jnp.asarray(st.mm_basis) if warm_basis else None,
             key=solve_key, block_rows=cfg.block_rows)
+        # use_pallas routes the landmark solve through the streaming
+        # fused pipeline: C is recomputed tile-by-tile in VMEM (never
+        # materialized), at the configured affinity_dtype precision.
         if method == "sharded":
             from repro.cohort.sharded import sharded_nystrom_from_landmarks
             y, evals, mm_basis, w_basis = sharded_nystrom_from_landmarks(
                 x, idx, k, gamma, self._cohort_mesh(),
-                use_pallas=cfg.use_pallas, **kwargs)
+                use_pallas=cfg.use_pallas, fused=cfg.use_pallas,
+                affinity_dtype=cfg.affinity_dtype, **kwargs)
         else:
             y, evals, mm_basis, w_basis = nystrom_from_landmarks(
-                x, idx, k, gamma, use_pallas=cfg.use_pallas, **kwargs)
+                x, idx, k, gamma, use_pallas=cfg.use_pallas,
+                fused=cfg.use_pallas, affinity_dtype=cfg.affinity_dtype,
+                **kwargs)
         return y, evals, warm, idx, gamma, w_basis, mm_basis

@@ -66,9 +66,50 @@ def _nystrom_core(c, w_isqrt, k: int, *, axis_name=None,
     return row_normalize(v), evals, basis
 
 
+def _nystrom_core_fused(x, z, gamma, w_isqrt, k: int, *, mask=None,
+                        axis_name=None, affinity_dtype: str = "f32",
+                        mm_solver: str = "eigh", mm_iters: int = 30,
+                        mm_q0=None, key=None, block_rows: int = 2048):
+    """Streaming twin of ``_nystrom_core``: C never hits HBM.
+
+    Same math, but the (n_local, m) cross-affinity is recomputed tile-by-
+    tile inside three fused Pallas passes (``kernels/nystrom_pallas.py``)
+    instead of being materialized and re-read: colsum → rotated SᵀS Gram
+    → row-normalized extension.  ``x`` is the raw (n_local, d) rows (the
+    affinity is fused in), ``mask`` zeroes padded rows, and the two
+    ``psum`` points are identical to the unfused core — the Gram kernel's
+    last-step ``W⁻¹ᐟ²·put·W⁻¹ᐟ²`` rotation is linear, so psum-of-rotated
+    equals rotated-psum.  ``affinity_dtype`` picks the tile precision
+    (f32 / bf16 / int8 — see the kernel module).
+    """
+    from repro.kernels import ops as kernel_ops
+    col = kernel_ops.nystrom_colsum(x, z, gamma, mask,
+                                    affinity_dtype=affinity_dtype)
+    if axis_name is not None:
+        col = jax.lax.psum(col, axis_name)
+    u = w_isqrt @ (w_isqrt @ col)                              # (m,)
+    mm = kernel_ops.nystrom_gram(x, z, gamma, u, w_isqrt, mask,
+                                 affinity_dtype=affinity_dtype)
+    if axis_name is not None:
+        mm = jax.lax.psum(mm, axis_name)
+    mm = 0.5 * (mm + mm.T)
+    r = mm.shape[0] if mm_solver == "eigh" else k
+    lam, top = topk_eigh(mm, r, solver=mm_solver, iters=mm_iters,
+                         q0=mm_q0, key=key, block_rows=block_rows,
+                         use_pallas=True)
+    basis = top[:, :k]
+    proj = (w_isqrt @ basis) * jax.lax.rsqrt(
+        jnp.maximum(lam[:k], _EPS))[None, :]                   # (m, k)
+    v = kernel_ops.nystrom_extension(x, z, gamma, u, proj, mask,
+                                     affinity_dtype=affinity_dtype)
+    evals = 1.0 - lam                                          # asc. L_norm
+    return v, evals, basis
+
+
 def landmark_block_isqrt(z, gamma, *, w=None, w_solver: str = "eigh",
                          w_rank: int | None = None, iters: int = 30,
-                         w_q0=None, key=None, block_rows: int = 2048):
+                         w_q0=None, key=None, block_rows: int = 2048,
+                         use_pallas: bool = False):
     """W^{-1/2} of the landmark affinity block, plus its eigenbasis.
 
     ``w`` overrides the affinity block (callers that already hold the
@@ -84,7 +125,8 @@ def landmark_block_isqrt(z, gamma, *, w=None, w_solver: str = "eigh",
     w = 0.5 * (w + w.T)
     r = m if w_solver == "eigh" else min(m, w_rank or m)
     ew, uw = topk_eigh(w, r, solver=w_solver, iters=iters, q0=w_q0,
-                       key=key, block_rows=block_rows)
+                       key=key, block_rows=block_rows,
+                       use_pallas=use_pallas)
     return isqrt_from_eigs(ew, uw), uw
 
 
@@ -98,6 +140,8 @@ def landmark_block_isqrt(z, gamma, *, w=None, w_solver: str = "eigh",
 # which the engine's "auto" method resolution does by default.
 def nystrom_from_landmarks(x, idx, k: int, gamma, *,
                            use_pallas: bool = False,
+                           fused: bool = False,
+                           affinity_dtype: str = "f32",
                            w_solver: str = "eigh",
                            w_rank: int | None = None,
                            mm_solver: str = "eigh", iters: int = 30,
@@ -114,6 +158,15 @@ def nystrom_from_landmarks(x, idx, k: int, gamma, *,
       for ``mm_solver="eigh"``, k for ``"subspace"``);
     * ``mm_basis`` / ``w_basis`` — the two eigenbases a later call can
       warm-start from (``mm_q0`` / ``w_q0``).
+
+    ``fused=True`` runs the streaming Pallas pipeline instead — the
+    (n, m) C block is never materialized and ``affinity_dtype`` selects
+    the tile precision.  Numerically this is the same operator up to
+    the tiled f32 summation order, which rotates the (degenerate)
+    leading eigenspace: compare rotation-invariant quantities (``evals``,
+    the ``y·yᵀ`` projector, cluster partitions), not raw embeddings.
+    ``fused=False`` (the default) is the jnp-composed reference the
+    tests pin the fused path against.
     """
     x = x.astype(jnp.float32)
     z = x[idx]
@@ -121,6 +174,22 @@ def nystrom_from_landmarks(x, idx, k: int, gamma, *,
         w_key, mm_key = jax.random.split(key)
     else:
         w_key = mm_key = None
+    if fused:
+        from repro.kernels import ops as kernel_ops
+        # W through the same quantized tile math as the streamed C
+        # panels (per-row scales make it partition-independent), for the
+        # same backend-consistency reason as the unfused ``c[idx]``.
+        w = kernel_ops.quantized_cross_affinity(
+            z, z, gamma, affinity_dtype=affinity_dtype)
+        w_isqrt, w_basis = landmark_block_isqrt(
+            z, gamma, w=w, w_solver=w_solver, w_rank=w_rank,
+            iters=iters, w_q0=w_q0, key=w_key, block_rows=block_rows,
+            use_pallas=True)
+        y, evals, basis = _nystrom_core_fused(
+            x, z, gamma, w_isqrt, k, affinity_dtype=affinity_dtype,
+            mm_solver=mm_solver, mm_iters=iters, mm_q0=mm_q0,
+            key=mm_key, block_rows=block_rows)
+        return y, evals, basis, w_basis
     c = cross_affinity(x, z, gamma=gamma, use_pallas=use_pallas)  # (n, m)
     # W = the landmark rows of C (not recomputed from z): keeping W on
     # the same backend/accumulation as C keeps the two consistent inside

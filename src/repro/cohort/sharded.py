@@ -24,20 +24,33 @@ import jax.numpy as jnp
 from jax.experimental.shard_map import shard_map
 from jax.sharding import PartitionSpec as P
 
-from repro.cohort.nystrom import _nystrom_core, landmark_block_isqrt
+from repro.cohort.nystrom import (_nystrom_core, _nystrom_core_fused,
+                                  landmark_block_isqrt)
 from repro.core.spectral import cross_affinity
 
 # jitted shard_map closures keyed on (mesh, k, mm_solver, warm, iters,
-# block_rows, use_pallas) — rebuilding the closure per call would
-# retrace every round.
+# block_rows, use_pallas, fused, affinity_dtype) — rebuilding the
+# closure per call would retrace every round.
 _SHARDED_FNS: dict = {}
 
 
 def _build_sharded_fn(mesh, k: int, mm_solver: str, warm: bool,
-                      iters: int, block_rows: int, use_pallas: bool):
+                      iters: int, block_rows: int, use_pallas: bool,
+                      fused: bool = False, affinity_dtype: str = "f32"):
     axis = mesh.axis_names[0]
 
     def body(x_s, mask_s, z, w_isqrt, gamma, mm_q0):
+        if fused:
+            # streaming pipeline: each shard's (N/D, m) C panel lives
+            # only tile-by-tile in VMEM; the same two psums (col, SᵀS)
+            # fire inside the fused core — the Gram kernel's last-step
+            # W⁻¹ᐟ² rotation is linear, so per-shard rotated Grams sum
+            # to the rotated global Gram.
+            return _nystrom_core_fused(
+                x_s, z, gamma, w_isqrt, k, mask=mask_s, axis_name=axis,
+                affinity_dtype=affinity_dtype, mm_solver=mm_solver,
+                mm_iters=iters, mm_q0=mm_q0 if warm else None,
+                key=None, block_rows=block_rows)
         c = cross_affinity(x_s, z, gamma=gamma, use_pallas=use_pallas)
         c = c * mask_s[:, None]
         return _nystrom_core(
@@ -52,12 +65,14 @@ def _build_sharded_fn(mesh, k: int, mm_solver: str, warm: bool,
         # pallas_call has no replication rule yet; the replicated (P())
         # outputs are psum-derived either way, so the check adds nothing
         # on the kernel path
-        check_rep=not use_pallas)
+        check_rep=not (use_pallas or fused))
     return jax.jit(fn)
 
 
 def sharded_nystrom_from_landmarks(x, idx, k: int, gamma, mesh, *,
                                    use_pallas: bool = False,
+                                   fused: bool = False,
+                                   affinity_dtype: str = "f32",
                                    w_solver: str = "eigh",
                                    w_rank: int | None = None,
                                    mm_solver: str = "eigh",
@@ -70,6 +85,9 @@ def sharded_nystrom_from_landmarks(x, idx, k: int, gamma, mesh, *,
     with ``y`` materialized as a global array sharded over the mesh.
     Numerically the two paths differ only by the float summation order
     of the two psums, so outputs agree to f32 reduction tolerance.
+    ``fused=True`` swaps the shard body for the streaming Pallas core
+    (``affinity_dtype`` tile precision; no per-shard (N/D, m) C panel in
+    HBM) — same psum structure, so the mesh communication is unchanged.
     """
     n = x.shape[0]
     x = jnp.asarray(x, jnp.float32)
@@ -80,11 +98,17 @@ def sharded_nystrom_from_landmarks(x, idx, k: int, gamma, mesh, *,
         w_key = mm_key = None
     # W on the same backend as the sharded C panels (see nystrom.py on
     # backend consistency inside the degenerate leading eigenspace)
+    if fused:
+        from repro.kernels import ops as kernel_ops
+        w = kernel_ops.quantized_cross_affinity(
+            z, z, gamma, affinity_dtype=affinity_dtype)
+    else:
+        w = cross_affinity(z, z, gamma=gamma, use_pallas=use_pallas)
     w_isqrt, w_basis = landmark_block_isqrt(
-        z, gamma, w=cross_affinity(z, z, gamma=gamma,
-                                   use_pallas=use_pallas),
+        z, gamma, w=w,
         w_solver=w_solver, w_rank=w_rank, iters=iters,
-        w_q0=w_q0, key=w_key, block_rows=block_rows)
+        w_q0=w_q0, key=w_key, block_rows=block_rows,
+        use_pallas=fused or use_pallas)
 
     num_shards = mesh.devices.size
     pad = (-n) % num_shards
@@ -103,11 +127,11 @@ def sharded_nystrom_from_landmarks(x, idx, k: int, gamma, mesh, *,
         q0 = jnp.zeros((m, k), jnp.float32)        # unused placeholder
 
     cache_key = (mesh, k, mm_solver, warm or mm_solver == "subspace",
-                 iters, block_rows, use_pallas)
+                 iters, block_rows, use_pallas, fused, affinity_dtype)
     if cache_key not in _SHARDED_FNS:
         _SHARDED_FNS[cache_key] = _build_sharded_fn(
             mesh, k, mm_solver, warm or mm_solver == "subspace", iters,
-            block_rows, use_pallas)
+            block_rows, use_pallas, fused, affinity_dtype)
     y, evals, basis = _SHARDED_FNS[cache_key](
         xp, mask, z, w_isqrt, jnp.asarray(gamma, jnp.float32), q0)
     return y[:n], evals, basis, w_basis

@@ -7,6 +7,10 @@ tiling), ``ops.py`` (jitted wrappers with backend selection), ``ref.py``
 Kernels:
   * affinity_pallas        -- pairwise distances / fused RBF affinity
                               (spectral clustering hotspot, Algorithm I)
+  * nystrom_pallas         -- streaming fused Nyström passes (colsum /
+                              Gram / extension: the (N, m) cross-affinity
+                              never hits HBM) + quantized f32/bf16/int8
+                              affinity tiles + eigensolver panel matmul
   * flash_attention_pallas -- blocked online-softmax GQA attention
   * ssd_pallas             -- Mamba2 SSD intra-chunk dual form
 """

@@ -64,6 +64,16 @@ def _pad_rows(a, mult):
     return (jnp.pad(a, ((0, pad), (0, 0))), pad) if pad else (a, 0)
 
 
+def _col_block(m, block_n):
+    """Landmark-axis block: never pad a small m up to a full 128 block.
+
+    m < block_n would round a 65-landmark solve up to 128 columns — ~2×
+    wasted kernel work on sliced-off lanes.  Cap the block at m rounded
+    to the 8-sublane granule instead.
+    """
+    return min(block_n, -(-m // 8) * 8)
+
+
 @functools.partial(jax.jit, static_argnames=("block_m", "block_n",
                                              "interpret"))
 def pairwise_sq_dists_pallas(x, y, *, block_m: int = 128, block_n: int = 128,
@@ -71,6 +81,7 @@ def pairwise_sq_dists_pallas(x, y, *, block_m: int = 128, block_n: int = 128,
     """(n, d), (m, d) -> (n, m) squared distances, f32."""
     n, d = x.shape
     m = y.shape[0]
+    block_n = _col_block(m, block_n)
     xp, _ = _pad_rows(x, block_m)
     yp, _ = _pad_rows(y, block_n)
     grid = (xp.shape[0] // block_m, yp.shape[0] // block_n)
@@ -125,6 +136,7 @@ def rbf_cross_affinity_pallas(x, y, gamma, *, block_m: int = 128,
     """
     n, d = x.shape
     m = y.shape[0]
+    block_n = _col_block(m, block_n)
     xp, _ = _pad_rows(x, block_m)
     yp, _ = _pad_rows(y, block_n)
     gamma_arr = jnp.asarray(gamma, jnp.float32).reshape(1, 1)

@@ -1,0 +1,370 @@
+"""Streaming fused Nyström pipeline: C→S→SᵀS with no (N, m) in HBM.
+
+``cohort/nystrom.py::_nystrom_core`` composes the landmark extension from
+jnp ops around one Pallas affinity kernel, which materializes the (N, m)
+cross-affinity C and re-reads it from HBM three more times (column sum,
+degree scaling, SᵀS, extension).  At N = 10⁵–10⁸ the select is memory-
+bound, so these kernels recompute the C tile from the (block_m, d) row
+panel each pass instead of ever writing it out — three grid sweeps over
+row panels, each tile living and dying in VMEM:
+
+1. ``nystrom_colsum_pallas``   — affinity tile + column sum, accumulating
+   ``col = Σᵢ C_ij`` into a single (1, m) output block.
+2. ``nystrom_gram_pallas``     — recompute the tile, apply the
+   ``rsqrt(d̂)`` degree scaling in-register (``d̂ = C·u`` folds the
+   m-sized ``u = W⁻¹ᐟ²(W⁻¹ᐟ² col)`` the caller derives from pass 1),
+   accumulate the (m, m) ``SᵀS`` Gram across the grid, and rotate by
+   ``W⁻¹ᐟ²`` on the LAST grid step only — rotation is linear, so the
+   per-shard ``psum`` composition of ``cohort/sharded.py`` is unchanged:
+   ``psum(W⁻¹ᐟ² SᵀS_s W⁻¹ᐟ²) = W⁻¹ᐟ² (Σ_s SᵀS_s) W⁻¹ᐟ²``.
+3. ``nystrom_extension_pallas`` — recompute the tile a third time and
+   emit the row-normalized embedding ``V = S · proj`` directly, where
+   ``proj = (W⁻¹ᐟ² U)·rsqrt(λ)`` is the precomputed (m, k) projector.
+
+FLOPs triple on the affinity tile (recomputed 3×) but HBM traffic drops
+from ~7 (N, m) transfers to the (N, d) input read per pass — the right
+trade on every memory-bound backend.
+
+Quantized affinity (the AQT idiom): ``affinity_dtype`` selects the tile
+matmul precision — ``"f32"`` (exact), ``"bf16"`` (bf16 operands, f32 MXU
+accumulation), or ``"int8"`` (per-ROW amax/127 scales so the quantization
+grid is independent of the tile partition, int8×int8→int32 MXU dot,
+rescale by ``s_x·s_zᵀ``).  Row norms are taken from the same (de)quantized
+operands as the cross term so d² stays a true squared distance (≥ 0).
+
+Every wrapper takes ``interpret=`` (CPU CI runs the kernels in interpret
+mode) and has a matching ``*_ref`` oracle in ``kernels/ref.py``.
+
+A zero/one row ``mask`` (n,) input covers both the wrapper's own row
+padding and the global padding of the ``shard_map`` path: a masked row
+contributes a zero row of C, hence nothing to ``col`` or ``SᵀS``, and a
+zero (later sliced-off) row of V.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+_EPS = 1e-12      # degree / row-norm floor — matches cohort/nystrom.py
+_QEPS = 1e-8      # int8 scale floor for all-zero rows
+
+AFFINITY_DTYPES = ("f32", "bf16", "int8")
+
+
+def _quantize_rows(a):
+    """Per-row symmetric int8 quantization: (values, scales (rows, 1))."""
+    scale = jnp.maximum(jnp.max(jnp.abs(a), axis=-1, keepdims=True) / 127.0,
+                        _QEPS)
+    q = jnp.clip(jnp.round(a / scale), -127.0, 127.0)
+    return q, scale
+
+
+def _affinity_tile(x, z, gamma, affinity_dtype: str):
+    """One (bm, bn) RBF cross-affinity tile at the requested precision.
+
+    Same formula as ``affinity_pallas._cross_rbf_kernel``:
+    exp(-γ·max(‖x‖² + ‖z‖² − 2·x·zᵀ, 0)), f32 output.  For quantized
+    dtypes the norms are computed from the SAME rounded operands as the
+    cross term, so d² is the exact squared distance of the quantized
+    points (never negative by construction).
+    """
+    x = x.astype(jnp.float32)
+    z = z.astype(jnp.float32)
+    if affinity_dtype == "f32":
+        xc, zc = x, z
+        xy = jax.lax.dot_general(x, z, (((1,), (1,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+    elif affinity_dtype == "bf16":
+        xb = x.astype(jnp.bfloat16)
+        zb = z.astype(jnp.bfloat16)
+        xc = xb.astype(jnp.float32)
+        zc = zb.astype(jnp.float32)
+        xy = jax.lax.dot_general(xb, zb, (((1,), (1,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+    elif affinity_dtype == "int8":
+        qx, sx = _quantize_rows(x)                 # (bm, d), (bm, 1)
+        qz, sz = _quantize_rows(z)                 # (bn, d), (bn, 1)
+        acc = jax.lax.dot_general(qx.astype(jnp.int8), qz.astype(jnp.int8),
+                                  (((1,), (1,)), ((), ())),
+                                  preferred_element_type=jnp.int32)
+        xy = acc.astype(jnp.float32) * (sx * sz.T)
+        xc = qx * sx
+        zc = qz * sz
+    else:
+        raise ValueError(f"unknown affinity_dtype {affinity_dtype!r}; "
+                         f"expected one of {AFFINITY_DTYPES}")
+    xx = jnp.sum(xc * xc, axis=-1)[:, None]
+    zz = jnp.sum(zc * zc, axis=-1)[None, :]
+    d2 = jnp.maximum(xx + zz - 2.0 * xy, 0.0)
+    return jnp.exp(-gamma * d2)
+
+
+def _s_tile(c, u):
+    """Degree-normalized tile S = C·rsqrt(max(C·u, eps)) in-register."""
+    d_hat = jax.lax.dot_general(c, u, (((1,), (0,)), ((), ())),
+                                preferred_element_type=jnp.float32)  # (bm,1)
+    return c * jax.lax.rsqrt(jnp.maximum(d_hat, _EPS))
+
+
+# --------------------------------------------------------------------------
+# pass 1: fused affinity + column sum
+# --------------------------------------------------------------------------
+
+def _colsum_kernel(x_ref, z_ref, g_ref, mask_ref, o_ref, *, affinity_dtype):
+    i = pl.program_id(0)
+    c = _affinity_tile(x_ref[...], z_ref[...], g_ref[0, 0], affinity_dtype)
+    c = c * mask_ref[...]                                  # (bm, 1) bcast
+    @pl.when(i == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+    o_ref[...] += jnp.sum(c, axis=0, keepdims=True)        # (1, m)
+
+
+# --------------------------------------------------------------------------
+# pass 2: fused affinity + degree scaling + SᵀS Gram (+ last-step rotation)
+# --------------------------------------------------------------------------
+
+def _gram_kernel(x_ref, z_ref, g_ref, u_ref, wis_ref, mask_ref, o_ref, *,
+                 affinity_dtype):
+    i = pl.program_id(0)
+    c = _affinity_tile(x_ref[...], z_ref[...], g_ref[0, 0], affinity_dtype)
+    c = c * mask_ref[...]
+    s = _s_tile(c, u_ref[...])
+    @pl.when(i == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+    o_ref[...] += jax.lax.dot_general(s, s, (((0,), (0,)), ((), ())),
+                                      preferred_element_type=jnp.float32)
+    # W⁻¹ᐟ² rotation once, on the final accumulated Gram — linear, so the
+    # sharded psum over per-shard outputs still composes (see module doc)
+    @pl.when(i == pl.num_programs(0) - 1)
+    def _rotate():
+        wis = wis_ref[...]
+        o_ref[...] = jax.lax.dot_general(
+            jax.lax.dot_general(wis, o_ref[...], (((1,), (0,)), ((), ())),
+                                preferred_element_type=jnp.float32),
+            wis, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+
+
+# --------------------------------------------------------------------------
+# pass 3: fused affinity + degree scaling + projection + row normalization
+# --------------------------------------------------------------------------
+
+def _extension_kernel(x_ref, z_ref, g_ref, u_ref, proj_ref, mask_ref, o_ref,
+                      *, affinity_dtype):
+    c = _affinity_tile(x_ref[...], z_ref[...], g_ref[0, 0], affinity_dtype)
+    c = c * mask_ref[...]
+    s = _s_tile(c, u_ref[...])
+    v = jax.lax.dot_general(s, proj_ref[...], (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)  # (bm, k)
+    norm = jnp.sqrt(jnp.sum(v * v, axis=-1, keepdims=True))
+    o_ref[...] = v / jnp.maximum(norm, _EPS)
+
+
+# --------------------------------------------------------------------------
+# eigensolver row-panel matmul (subspace sweeps)
+# --------------------------------------------------------------------------
+
+def _panel_matmul_kernel(w_ref, q_ref, o_ref):
+    o_ref[...] = jax.lax.dot_general(
+        w_ref[...], q_ref[...], (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+
+def _quant_cross_kernel(x_ref, y_ref, g_ref, o_ref, *, affinity_dtype):
+    o_ref[...] = _affinity_tile(x_ref[...], y_ref[...], g_ref[0, 0],
+                                affinity_dtype)
+
+
+def _round_up(v: int, mult: int) -> int:
+    return -(-v // mult) * mult
+
+
+def _row_block(n: int, block_m: int) -> int:
+    """Effective row-panel height: never pad small n up to a huge panel."""
+    return min(block_m, _round_up(max(n, 1), 8))
+
+
+def _pad_rows_mask(x, mask, bm):
+    """Pad rows to a ``bm`` multiple; padded mask entries are zero."""
+    n = x.shape[0]
+    if mask is None:
+        mask = jnp.ones((n,), jnp.float32)
+    mask = jnp.asarray(mask, jnp.float32).reshape(n, 1)
+    pad = (-n) % bm
+    if pad:
+        x = jnp.pad(x, ((0, pad), (0, 0)))
+        mask = jnp.pad(mask, ((0, pad), (0, 0)))
+    return x, mask
+
+
+@functools.partial(jax.jit, static_argnames=("affinity_dtype", "block_m",
+                                             "interpret"))
+def nystrom_colsum_pallas(x, z, gamma, mask=None, *,
+                          affinity_dtype: str = "f32", block_m: int = 1024,
+                          interpret: bool = False):
+    """Fused ``col = Σᵢ exp(-γ d²(xᵢ, z))·maskᵢ`` without materializing C.
+
+    x: (n, d) rows, z: (m, d) landmarks, mask: optional (n,) zero/one
+    rows.  Returns (m,) f32.  The (block_m, m) affinity tile exists only
+    in VMEM.
+    """
+    n = x.shape[0]
+    m = z.shape[0]
+    bm = _row_block(n, block_m)
+    xp, maskp = _pad_rows_mask(x, mask, bm)
+    gamma_arr = jnp.asarray(gamma, jnp.float32).reshape(1, 1)
+    kern = functools.partial(_colsum_kernel, affinity_dtype=affinity_dtype)
+    d = x.shape[1]
+    out = pl.pallas_call(
+        kern,
+        grid=(xp.shape[0] // bm,),
+        in_specs=[pl.BlockSpec((bm, d), lambda i: (i, 0)),
+                  pl.BlockSpec((m, d), lambda i: (0, 0)),
+                  pl.BlockSpec((1, 1), lambda i: (0, 0)),
+                  pl.BlockSpec((bm, 1), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((1, m), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((1, m), jnp.float32),
+        interpret=interpret,
+    )(xp, z, gamma_arr, maskp)
+    return out[0]
+
+
+@functools.partial(jax.jit, static_argnames=("affinity_dtype", "block_m",
+                                             "interpret"))
+def nystrom_gram_pallas(x, z, gamma, u, w_isqrt, mask=None, *,
+                        affinity_dtype: str = "f32", block_m: int = 1024,
+                        interpret: bool = False):
+    """Fused ``W⁻¹ᐟ² (SᵀS) W⁻¹ᐟ²`` where S is the degree-normalized C.
+
+    ``u`` (m,) is ``W⁻¹ᐟ²(W⁻¹ᐟ² col)`` from pass 1 (globally psummed on
+    the sharded path); ``w_isqrt`` (m, m).  Returns the rotated (m, m)
+    Gram — symmetrize and eigensolve on the host side.
+    """
+    n = x.shape[0]
+    m = z.shape[0]
+    bm = _row_block(n, block_m)
+    xp, maskp = _pad_rows_mask(x, mask, bm)
+    gamma_arr = jnp.asarray(gamma, jnp.float32).reshape(1, 1)
+    u2 = jnp.asarray(u, jnp.float32).reshape(m, 1)
+    kern = functools.partial(_gram_kernel, affinity_dtype=affinity_dtype)
+    d = x.shape[1]
+    out = pl.pallas_call(
+        kern,
+        grid=(xp.shape[0] // bm,),
+        in_specs=[pl.BlockSpec((bm, d), lambda i: (i, 0)),
+                  pl.BlockSpec((m, d), lambda i: (0, 0)),
+                  pl.BlockSpec((1, 1), lambda i: (0, 0)),
+                  pl.BlockSpec((m, 1), lambda i: (0, 0)),
+                  pl.BlockSpec((m, m), lambda i: (0, 0)),
+                  pl.BlockSpec((bm, 1), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((m, m), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, m), jnp.float32),
+        interpret=interpret,
+    )(xp, z, gamma_arr, u2, jnp.asarray(w_isqrt, jnp.float32), maskp)
+    return out
+
+
+@functools.partial(jax.jit, static_argnames=("affinity_dtype", "block_m",
+                                             "interpret"))
+def nystrom_extension_pallas(x, z, gamma, u, proj, mask=None, *,
+                             affinity_dtype: str = "f32",
+                             block_m: int = 1024, interpret: bool = False):
+    """Fused row-normalized extension ``row_normalize(S · proj)``.
+
+    ``proj`` (m, k) is ``(W⁻¹ᐟ² U_k)·rsqrt(λ_k)`` — the whole right-hand
+    side of the Nyström extension collapsed to one matmul.  Returns
+    (n, k) f32 with unit rows (masked/zero rows stay zero).
+    """
+    n = x.shape[0]
+    m = z.shape[0]
+    k = proj.shape[1]
+    bm = _row_block(n, block_m)
+    xp, maskp = _pad_rows_mask(x, mask, bm)
+    gamma_arr = jnp.asarray(gamma, jnp.float32).reshape(1, 1)
+    u2 = jnp.asarray(u, jnp.float32).reshape(m, 1)
+    kern = functools.partial(_extension_kernel,
+                             affinity_dtype=affinity_dtype)
+    d = x.shape[1]
+    out = pl.pallas_call(
+        kern,
+        grid=(xp.shape[0] // bm,),
+        in_specs=[pl.BlockSpec((bm, d), lambda i: (i, 0)),
+                  pl.BlockSpec((m, d), lambda i: (0, 0)),
+                  pl.BlockSpec((1, 1), lambda i: (0, 0)),
+                  pl.BlockSpec((m, 1), lambda i: (0, 0)),
+                  pl.BlockSpec((m, k), lambda i: (0, 0)),
+                  pl.BlockSpec((bm, 1), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((bm, k), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((xp.shape[0], k), jnp.float32),
+        interpret=interpret,
+    )(xp, z, gamma_arr, u2, jnp.asarray(proj, jnp.float32), maskp)
+    return out[:n]
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
+def panel_matmul_pallas(w, q, *, block_rows: int = 2048,
+                        interpret: bool = False):
+    """Row-panel (m, p) @ (p, r) with the panel loop inside one kernel.
+
+    The Pallas twin of ``cohort/eigensolver.py::_blocked_matmul``: the
+    subspace sweep's W·Q product evaluated one (block_rows, p) panel at a
+    time so peak residency stays O(block_rows·p), without round-tripping
+    each panel through a separate XLA dispatch.
+    """
+    m, p = w.shape
+    r = q.shape[1]
+    bl = _row_block(m, block_rows)
+    pad = (-m) % bl
+    wp = jnp.pad(w.astype(jnp.float32), ((0, pad), (0, 0))) if pad \
+        else w.astype(jnp.float32)
+    out = pl.pallas_call(
+        _panel_matmul_kernel,
+        grid=(wp.shape[0] // bl,),
+        in_specs=[pl.BlockSpec((bl, p), lambda i: (i, 0)),
+                  pl.BlockSpec((p, r), lambda i: (0, 0))],
+        out_specs=pl.BlockSpec((bl, r), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((wp.shape[0], r), jnp.float32),
+        interpret=interpret,
+    )(wp, q.astype(jnp.float32))
+    return out[:m]
+
+
+@functools.partial(jax.jit, static_argnames=("affinity_dtype", "block_m",
+                                             "interpret"))
+def quantized_cross_affinity_pallas(x, y, gamma, *,
+                                    affinity_dtype: str = "f32",
+                                    block_m: int = 128,
+                                    interpret: bool = False):
+    """Materialized cross-affinity at a chosen tile precision.
+
+    The m-sized companion of the streaming passes: the fused path builds
+    its landmark block W = A(z, z) through the SAME quantized tile math
+    (per-row scales make the result partition-independent), keeping W
+    bit-consistent with the streamed C tiles.  ``"f32"`` reproduces
+    ``rbf_cross_affinity_pallas`` exactly.
+    """
+    n = x.shape[0]
+    m = y.shape[0]
+    bm = _row_block(n, block_m)
+    xp, _ = _pad_rows_mask(x, None, bm)
+    gamma_arr = jnp.asarray(gamma, jnp.float32).reshape(1, 1)
+    kern = functools.partial(_quant_cross_kernel,
+                             affinity_dtype=affinity_dtype)
+    d = x.shape[1]
+    out = pl.pallas_call(
+        kern,
+        grid=(xp.shape[0] // bm,),
+        in_specs=[pl.BlockSpec((bm, d), lambda i: (i, 0)),
+                  pl.BlockSpec((m, d), lambda i: (0, 0)),
+                  pl.BlockSpec((1, 1), lambda i: (0, 0))],
+        out_specs=pl.BlockSpec((bm, m), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((xp.shape[0], m), jnp.float32),
+        interpret=interpret,
+    )(xp, y, gamma_arr)
+    return out[:n]

@@ -35,6 +35,76 @@ def rbf_cross_affinity_ref(x, y, gamma: float):
     return jnp.exp(-gamma * pairwise_sq_dists_ref(x, y))
 
 
+def _quantized_points_ref(a, affinity_dtype: str):
+    """The (de)quantized operand the tile math actually dots.
+
+    Per-row symmetric scales (int8) / bf16 rounding — row-wise, so the
+    result is independent of how the kernels partition rows into tiles.
+    """
+    a = a.astype(jnp.float32)
+    if affinity_dtype == "f32":
+        return a
+    if affinity_dtype == "bf16":
+        return a.astype(jnp.bfloat16).astype(jnp.float32)
+    if affinity_dtype == "int8":
+        scale = jnp.maximum(
+            jnp.max(jnp.abs(a), axis=-1, keepdims=True) / 127.0, 1e-8)
+        return jnp.clip(jnp.round(a / scale), -127.0, 127.0) * scale
+    raise ValueError(f"unknown affinity_dtype {affinity_dtype!r}")
+
+
+def quantized_cross_affinity_ref(x, y, gamma, *, affinity_dtype="f32"):
+    """Cross-affinity on the quantized points: the fused-tile ground truth.
+
+    Exactly :func:`rbf_cross_affinity_ref` evaluated at the rounded
+    operands, which is what per-row-scale quantization with exact (int32
+    / f32-accumulated) dots computes.
+    """
+    xq = _quantized_points_ref(x, affinity_dtype)
+    yq = _quantized_points_ref(y, affinity_dtype)
+    return jnp.exp(-gamma * pairwise_sq_dists_ref(xq, yq))
+
+
+def _masked_c_ref(x, z, gamma, mask, affinity_dtype):
+    c = quantized_cross_affinity_ref(x, z, gamma,
+                                     affinity_dtype=affinity_dtype)
+    if mask is not None:
+        c = c * jnp.asarray(mask, jnp.float32).reshape(-1)[:, None]
+    return c
+
+
+def nystrom_colsum_ref(x, z, gamma, mask=None, *, affinity_dtype="f32"):
+    """Oracle for ``nystrom_colsum_pallas``: col = Σᵢ C_ij (masked rows drop)."""
+    return jnp.sum(_masked_c_ref(x, z, gamma, mask, affinity_dtype), axis=0)
+
+
+def _s_ref(c, u):
+    d_hat = c @ jnp.asarray(u, jnp.float32).reshape(-1)
+    return c * jax.lax.rsqrt(jnp.maximum(d_hat, 1e-12))[:, None]
+
+
+def nystrom_gram_ref(x, z, gamma, u, w_isqrt, mask=None, *,
+                     affinity_dtype="f32"):
+    """Oracle for ``nystrom_gram_pallas``: W⁻¹ᐟ² (SᵀS) W⁻¹ᐟ², materialized."""
+    s = _s_ref(_masked_c_ref(x, z, gamma, mask, affinity_dtype), u)
+    w_isqrt = jnp.asarray(w_isqrt, jnp.float32)
+    return w_isqrt @ (s.T @ s) @ w_isqrt
+
+
+def nystrom_extension_ref(x, z, gamma, u, proj, mask=None, *,
+                          affinity_dtype="f32"):
+    """Oracle for ``nystrom_extension_pallas``: row_normalize(S @ proj)."""
+    s = _s_ref(_masked_c_ref(x, z, gamma, mask, affinity_dtype), u)
+    v = s @ jnp.asarray(proj, jnp.float32)
+    norm = jnp.sqrt(jnp.sum(v * v, axis=-1, keepdims=True))
+    return v / jnp.maximum(norm, 1e-12)
+
+
+def panel_matmul_ref(w, q):
+    """Oracle for ``panel_matmul_pallas``: the plain f32 matmul."""
+    return w.astype(jnp.float32) @ q.astype(jnp.float32)
+
+
 def attention_ref(q, k, v, *, causal=True, window=None, scale=None):
     """Naive GQA attention.  q: (B,S,H,d), k/v: (B,T,K,dv)."""
     B, S, H, dh = q.shape

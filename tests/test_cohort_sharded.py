@@ -81,17 +81,48 @@ def test_engine_sharded_matches_nystrom_partition():
 
 
 def test_sharded_pallas_path_matches_jnp():
-    """use_pallas must actually route through the kernel on the sharded
+    """use_pallas must actually route through the kernels on the sharded
     path (regression: it used to be silently dropped) and agree with
-    the jnp formula."""
+    the jnp formula.  use_pallas now runs the streaming fused pipeline,
+    whose tiled accumulation order differs from the materialized jnp
+    composition — the partition and the leading (eigengap-informing)
+    evals must still match tightly; the noise-dominated tail of the
+    spectrum (near-null directions of W) gets a looser bound."""
     x, _ = blobs()
+    k = 4
     mk = lambda pallas: CohortEngine(
-        CohortConfig(num_clusters=4, method="sharded", num_landmarks=64,
+        CohortConfig(num_clusters=k, method="sharded", num_landmarks=64,
                      use_pallas=pallas), seed=0)
     r_pal = mk(True).select(x)
     r_jnp = mk(False).select(x)
     assert same_partition(r_pal.assign, r_jnp.assign)
-    np.testing.assert_allclose(r_pal.evals, r_jnp.evals, atol=1e-3)
+    # leading k evals (below the eigengap) are tightly pinned; from
+    # index k upward the spectrum is the degenerate ~1 bulk, where the
+    # near-null directions of W wander at the accumulation-order level
+    np.testing.assert_allclose(r_pal.evals[:k], r_jnp.evals[:k], atol=1e-3)
+    np.testing.assert_allclose(r_pal.evals, r_jnp.evals, atol=1e-2)
+
+
+@pytest.mark.parametrize("affinity_dtype", ["f32", "bf16", "int8"])
+def test_sharded_fused_quantized_matches_jnp_partition(affinity_dtype):
+    """The streaming fused pipeline (use_pallas=True) at every tile
+    precision must reproduce the jnp partition across the mesh — the
+    per-shard fused accumulators compose with the two psums exactly
+    like the materialized path (the last-step W⁻¹ᐟ² rotation is
+    linear), including the padded-row masking on n=509."""
+    x, labels = blobs()
+    k = 4
+    r_fused = CohortEngine(
+        CohortConfig(num_clusters=k, method="sharded", num_landmarks=64,
+                     use_pallas=True, affinity_dtype=affinity_dtype),
+        seed=0).select(x)
+    r_jnp = CohortEngine(
+        CohortConfig(num_clusters=k, method="sharded", num_landmarks=64),
+        seed=0).select(x)
+    assert same_partition(r_fused.assign, r_jnp.assign)
+    tol = 1e-3 if affinity_dtype == "f32" else 2e-2
+    np.testing.assert_allclose(r_fused.evals[:k], r_jnp.evals[:k],
+                               atol=tol)
 
 
 def test_sharded_warm_start_equals_cold_start():
